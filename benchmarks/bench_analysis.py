@@ -1,0 +1,69 @@
+"""Benchmark 2 (Table-2 analogue): analysis cost per topology metric.
+
+Times each analysis stage — APSP (min-plus kernel), spectral bounds, path
+diversity, histogram — on matched ~10k-server instances of every family, and
+on sampled-BFS mode for a ~1M-server instance.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import topology as T
+from repro.core.analysis import (
+    analyze, apsp_dense, path_diversity, sampled_distances, spectral_bounds,
+)
+
+
+def run(quick: bool = False) -> List[dict]:
+    rows = []
+    fams = ["slimfly", "jellyfish", "xpander", "hyperx", "dragonfly", "fattree"]
+    if quick:
+        fams = fams[:3]
+    for fam in fams:
+        g = T.by_servers(fam, 10_000)
+        t0 = time.time()
+        dist = apsp_dense(g)
+        t_apsp = time.time() - t0
+        t0 = time.time()
+        spec = spectral_bounds(g, iters=150)
+        t_spec = time.time() - t0
+        t0 = time.time()
+        div = path_diversity(g, dist, pairs=256)
+        t_div = time.time() - t0
+        rows.append({
+            "family": fam, "routers": g.n, "servers": g.num_servers,
+            "apsp_s": round(t_apsp, 2), "spectral_s": round(t_spec, 2),
+            "diversity_s": round(t_div, 2),
+            "diameter": int(dist[dist < 1e9].max()),
+            "avg_path": round(float(dist[dist < 1e9].sum() / max(1, g.n * (g.n - 1))), 3),
+            "fiedler": round(spec["fiedler_lambda2"], 2),
+            "bisection_lb": int(spec["bisection_lower_bound"]),
+            "diversity_mean": round(float(div.mean()), 2),
+        })
+    # million-server sampled mode
+    if not quick:
+        g = T.by_servers("jellyfish", 1_000_000)
+        t0 = time.time()
+        d = sampled_distances(g, n_sources=16)
+        t_bfs = time.time() - t0
+        rows.append({
+            "family": "jellyfish-1M (sampled)", "routers": g.n,
+            "servers": g.num_servers, "apsp_s": round(t_bfs, 2),
+            "spectral_s": None, "diversity_s": None,
+            "diameter": int(d.max()),
+            "avg_path": round(float(d[d > 0].mean()), 3),
+            "fiedler": None, "bisection_lb": None, "diversity_mean": None,
+        })
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark 1 (Table-1 analogue): topology generation scalability.
+
+Generates every family at ~10k / ~100k / ~1M servers and reports wall time,
+router/edge counts, and generator memory (edge-array bytes). The EvalNet
+claim under test: million-server interconnects are generated in seconds on
+one machine because servers are implicit.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import topology as T
+
+SIZES = [10_000, 100_000, 1_000_000]
+
+
+def run(quick: bool = False) -> List[dict]:
+    rows = []
+    sizes = SIZES[:2] if quick else SIZES
+    for fam in T.families():
+        for target in sizes:
+            t0 = time.time()
+            g = T.by_servers(fam, target)
+            dt = time.time() - t0
+            rows.append({
+                "family": fam,
+                "target_servers": target,
+                "servers": g.num_servers,
+                "routers": g.n,
+                "edges": g.num_edges,
+                "gen_seconds": round(dt, 3),
+                "edge_mem_mb": round(g.edges.nbytes / 2**20, 1),
+            })
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    hdr = f"{'family':<11}{'target':>9}{'servers':>10}{'routers':>9}{'edges':>10}{'sec':>8}{'MB':>7}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['family']:<11}{r['target_servers']:>9}{r['servers']:>10}"
+              f"{r['routers']:>9}{r['edges']:>10}{r['gen_seconds']:>8.2f}"
+              f"{r['edge_mem_mb']:>7.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

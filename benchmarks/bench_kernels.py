@@ -1,0 +1,73 @@
+"""Benchmark 4: Pallas kernel micro-bench (interpret mode on CPU).
+
+Times min-plus / reachability / histogram against the jnp oracle across
+sizes and block shapes. On CPU the interpreter dominates, so oracle-vs-
+kernel wall time is NOT a TPU prediction — the value here is (a) the
+correctness sweep at bench scale and (b) VMEM working-set reporting per
+block shape (the quantity that matters on hardware).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _vmem_bytes(bm, bn, bk, dtype_bytes=4):
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def run(quick: bool = False) -> List[dict]:
+    rows = []
+    sizes = [256, 512] if quick else [256, 512, 1024]
+    key = jax.random.PRNGKey(0)
+    for n in sizes:
+        a = jax.random.uniform(key, (n, n)) * 10
+        for bm, bn, bk in [(128, 128, 128), (256, 256, 128)]:
+            if bm > n:
+                continue
+            t0 = time.time()
+            out = ops.minplus_matmul(a, a, bm=bm, bn=bn, bk=bk).block_until_ready()
+            t_k = time.time() - t0
+            t0 = time.time()
+            want = ref.minplus_matmul_ref(a, a).block_until_ready()
+            t_r = time.time() - t0
+            ok = bool(jnp.allclose(out, want, rtol=1e-6))
+            rows.append({
+                "kernel": "minplus", "n": n, "block": (bm, bn, bk),
+                "vmem_kb": _vmem_bytes(bm, bn, bk) // 1024,
+                "kernel_s": round(t_k, 3), "oracle_s": round(t_r, 3),
+                "match": ok,
+            })
+    a = (jax.random.uniform(key, (512, 512)) > 0.95).astype(jnp.float32)
+    t0 = time.time()
+    out = ops.reachability_step(a, a).block_until_ready()
+    rows.append({"kernel": "reachability", "n": 512,
+                 "block": (128, 128, 128), "vmem_kb": _vmem_bytes(128, 128, 128) // 1024,
+                 "kernel_s": round(time.time() - t0, 3),
+                 "oracle_s": None,
+                 "match": bool(jnp.allclose(out, ref.reachability_step_ref(a, a)))})
+    x = jnp.floor(jax.random.uniform(key, (1024, 1024)) * 16)
+    t0 = time.time()
+    h = ops.value_histogram(x, 16).block_until_ready()
+    rows.append({"kernel": "histogram", "n": 1024, "block": (256, 256),
+                 "vmem_kb": 256 * 256 * 4 // 1024,
+                 "kernel_s": round(time.time() - t0, 3), "oracle_s": None,
+                 "match": bool((h == ref.value_histogram_ref(x, 16)).all())})
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    for r in rows:
+        print(r)
+    assert all(r["match"] for r in rows), "kernel mismatch at bench scale"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

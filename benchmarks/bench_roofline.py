@@ -1,0 +1,69 @@
+"""Benchmark 5: the 40-cell roofline table, read from the dry-run artifacts.
+
+`launch/dryrun.py --all` writes one JSON per (arch x shape x mesh) into
+experiments/dryrun/; this bench aggregates them into the §Roofline table
+(EXPERIMENTS.md is generated from the same records).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records() -> List[dict]:
+    recs = []
+    if not DRYRUN_DIR.exists():
+        return recs
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def run(quick: bool = False) -> List[dict]:
+    rows = []
+    for rec in load_records():
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": "SKIP",
+                         "why": rec["reason"][:48]})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": "ok",
+            "mem_gb": rec["memory"]["per_device_total_gb"],
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "coll_flat_ms": round(r["collective_flat_s"] * 1e3, 2),
+            "coll_topo_ms": round(r["collective_topo_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "useful_flops": round(r["useful_flops_ratio"], 3),
+            "mfu_bound": round(r["mfu_bound"], 3),
+        })
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    if not rows:
+        print("no dry-run records found; run: python -m repro.launch.dryrun --all")
+        return rows
+    hdr = (f"{'arch':<24}{'shape':<12}{'mesh':<9}{'mem_gb':>8}{'comp_ms':>10}"
+           f"{'hbm_ms':>8}{'coll_ms':>9}{'dominant':>11}{'mfu<=':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] == "SKIP":
+            print(f"{r['arch']:<24}{r['shape']:<12}{r['mesh']:<9}  SKIP ({r['why']})")
+        else:
+            print(f"{r['arch']:<24}{r['shape']:<12}{r['mesh']:<9}{r['mem_gb']:>8.2f}"
+                  f"{r['compute_ms']:>10.2f}{r['memory_ms']:>8.2f}"
+                  f"{r['coll_flat_ms']:>9.2f}{r['dominant']:>11}{r['mfu_bound']:>7.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+  python -m benchmarks.run [--quick] [--only generation,analysis,...]
+
+  generation   Table-1 analogue: 10k/100k/1M-server generation scalability
+  analysis     Table-2 analogue: per-metric analysis cost
+  collectives  Fig-1 analogue: topology comparison under collective/traffic load
+  kernels      Pallas kernel sweep + VMEM working sets
+  roofline     the 40-cell dry-run roofline table (reads experiments/dryrun)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from . import (bench_analysis, bench_collectives, bench_generation,
+               bench_kernels, bench_roofline)
+
+BENCHES = {
+    "generation": bench_generation,
+    "analysis": bench_analysis,
+    "collectives": bench_collectives,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    OUT.mkdir(parents=True, exist_ok=True)
+    for name in names:
+        mod = BENCHES[name]
+        print(f"\n=== bench: {name} {'(quick)' if args.quick else ''} ===")
+        t0 = time.time()
+        rows = mod.main(quick=args.quick)
+        dt = time.time() - t0
+        (OUT / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+        print(f"[{name}] {len(rows)} rows in {dt:.1f}s -> experiments/bench/{name}.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Batched serving demo: continuous batching over a reduced gemma config.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

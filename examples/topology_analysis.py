@@ -1,0 +1,35 @@
+"""EvalNet end-to-end: generate -> analyze -> route traffic -> pick mesh map.
+
+Compares the assigned low-diameter families at a matched ~10k-server cost
+point (the Fig-1-style comparison) and prints the collective-planner view of
+the production TPU fabric.
+
+  PYTHONPATH=src python examples/topology_analysis.py
+"""
+from repro.core import topology as T, workload as W
+from repro.core.analysis import analyze
+from repro.core.collectives import (
+    HardwareModel, PhysicalFabric, plan_mesh_mapping,
+)
+
+FAMILIES = ["slimfly", "jellyfish", "xpander", "hyperx", "dragonfly", "fattree"]
+
+print(f"{'family':<11}{'routers':>8}{'servers':>9}{'diam':>6}{'avg':>7}"
+      f"{'fiedler':>9}{'bisec>=':>9}{'perm-imb':>9}")
+for fam in FAMILIES:
+    g = T.by_servers(fam, 10_000)
+    rep = analyze(g)
+    wl = W.make_traffic(g, "permutation", flows=2048)
+    tr = W.evaluate_workload(g, wl)
+    print(f"{fam:<11}{g.n:>8}{g.num_servers:>9}{rep['diameter']:>6}"
+          f"{rep['avg_path_length']:>7.2f}{rep.get('fiedler_lambda2', 0):>9.2f}"
+          f"{int(rep.get('bisection_lower_bound', 0)):>9}"
+          f"{tr['load_imbalance']:>9.2f}")
+
+print("\nProduction fabric planning (v5e pod = 16x16 ICI torus):")
+for axes, pods in [({"data": 16, "model": 16}, 1),
+                   ({"pod": 2, "data": 16, "model": 16}, 2)]:
+    plan = plan_mesh_mapping(axes, PhysicalFabric((16, 16), pods))
+    print(f"  mesh {axes} -> {plan.assignment}  "
+          f"bundle={plan.score_seconds*1e3:.3f} ms  "
+          f"links={[f'{k}:{v.kind}' for k, v in plan.axis_links.items()]}")

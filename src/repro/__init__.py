@@ -1,0 +1,2 @@
+"""repro: EvalNet-JAX — interconnect-aware multi-pod training/serving."""
+__version__ = "0.1.0"

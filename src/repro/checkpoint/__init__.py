@@ -1,0 +1,2 @@
+"""Sharded numpy checkpointing: atomic commit, keep-k, elastic restore."""
+from .manager import CheckpointManager, latest_step, restore, save  # noqa: F401

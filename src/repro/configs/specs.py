@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+`input_specs(cfg, shape_name)` returns the exact pytree the corresponding
+step function consumes: weak-type-correct, shardable, zero allocation.
+`abstract_train_state(cfg)` mirrors `steps.init_train_state` abstractly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeSpec, shape_for
+from ..models import encdec, steps, transformer
+from ..models.common import abstract_params
+
+__all__ = ["input_specs", "abstract_train_state", "abstract_params_tree",
+           "cell_is_applicable", "step_kind"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def cell_is_applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """long_500k requires a sub-quadratic mixer (SSM/hybrid)."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention architecture: 524288-token decode "
+                       "requires a sub-quadratic mixer (skip per assignment)")
+    return True, ""
+
+
+def step_kind(shape_name: str) -> str:
+    return shape_for(shape_name).kind  # train | prefill | decode
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Inputs for the step function of this cell (no state/params).
+
+    train:   {tokens, labels[, frames | prefix_embeds]}
+    prefill: {tokens[, frames | prefix_embeds]}
+    decode:  {token, caches, cache_pos}
+    """
+    sh = shape_for(shape_name)
+    b, s = sh.global_batch, sh.seq_len
+    pdt = _dtype(cfg.param_dtype)
+
+    if sh.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            out = {
+                "frames": _sds((b, cfg.enc_seq, cfg.d_model), pdt),
+                "tokens": _sds((b, s), jnp.int32),
+            }
+        elif cfg.n_prefix_tokens:
+            s_text = s - cfg.n_prefix_tokens
+            out = {
+                "prefix_embeds": _sds((b, cfg.n_prefix_tokens, cfg.d_model), pdt),
+                "tokens": _sds((b, s_text), jnp.int32),
+            }
+        else:
+            out = {"tokens": _sds((b, s), jnp.int32)}
+        if sh.kind == "train":
+            # label length matches the hidden-state length (prefix included)
+            out["labels"] = _sds((b, s), jnp.int32)
+        return out
+
+    # decode: single new token over a seq_len-deep cache
+    if cfg.is_encdec:
+        caches = jax.eval_shape(
+            lambda: encdec.init_decode_caches(cfg, b, s)
+        )
+    else:
+        caches = jax.eval_shape(
+            lambda: transformer.init_decode_caches(cfg, b, s)
+        )
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "caches": caches,
+        "cache_pos": _sds((), jnp.int32),
+    }
+
+
+def abstract_params_tree(cfg: ModelConfig, dtype: Optional[str] = None):
+    specs = steps.model_param_specs(cfg)
+    return abstract_params(specs, _dtype(dtype or cfg.param_dtype))
+
+
+def abstract_train_state(cfg: ModelConfig) -> Dict:
+    params = abstract_params_tree(cfg, cfg.master_dtype)
+    mdt = _dtype(cfg.moment_dtype)
+    moments = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), params)
+    return {
+        "params": params,
+        "opt": {
+            "m": moments,
+            "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }

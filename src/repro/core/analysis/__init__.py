@@ -1,0 +1,5 @@
+"""EvalNet analysis: APSP, spectral bounds, headline metrics, histograms."""
+from .apsp import apsp_dense, bfs_distances, sampled_distances  # noqa: F401
+from .metrics import analyze, path_diversity  # noqa: F401
+from .spectral import fiedler_value, spectral_bounds  # noqa: F401
+from .histograms import path_length_histogram  # noqa: F401

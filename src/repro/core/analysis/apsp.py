@@ -1,0 +1,87 @@
+"""All-pairs shortest paths and sampled BFS.
+
+Two regimes, matching the hardware adaptation in DESIGN.md §3:
+
+* dense min-plus matrix squaring (D_{2l} = D_l ⊗ D_l) for router counts that
+  fit a dense matrix — this is the TPU-native APSP; the (min,+) product runs
+  through the Pallas kernel (`repro.kernels.ops.minplus_matmul`).
+* frontier BFS over CSR (numpy) from sampled sources for very large graphs —
+  the classic toolchain path, used as oracle and for n > dense_limit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..graph import Graph
+
+__all__ = ["apsp_dense", "bfs_distances", "sampled_distances"]
+
+_INF = np.float32(np.inf)
+
+
+def apsp_dense(g: Graph, use_kernel: bool = True,
+               block: int = 256, max_squarings: int = 8) -> np.ndarray:
+    """Dense APSP via min-plus squaring. Returns (n, n) float32, inf = unreachable.
+
+    Cost: ceil(log2(diameter)) min-plus products of the padded (n, n) matrix.
+    """
+    from ... import kernels  # local import: keep core importable without kernels
+
+    d = g.distance_seed()
+    n = g.n
+    pad = (-n) % block
+    if pad:
+        d = np.pad(d, ((0, pad), (0, pad)), constant_values=_INF)
+        # keep padded diagonal at 0 so padding never creates paths
+        for i in range(n, n + pad):
+            d[i, i] = 0.0
+    dj = jnp.asarray(d)
+    product = kernels.ops.minplus_matmul if use_kernel else _minplus_jnp
+    for _ in range(max_squarings):
+        nxt = product(dj, dj)
+        if bool(jnp.all(nxt == dj)):
+            dj = nxt
+            break
+        dj = nxt
+    out = np.asarray(dj)[:n, :n]
+    return out
+
+
+def _minplus_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    # oracle semantics; used when the kernel path is disabled
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def bfs_distances(g: Graph, sources: np.ndarray) -> np.ndarray:
+    """Exact hop distances from each source via CSR frontier BFS.
+
+    Returns (len(sources), n) int32 with -1 for unreachable.
+    """
+    indptr, indices = g.csr()
+    out = np.full((len(sources), g.n), -1, dtype=np.int32)
+    for row, s in enumerate(np.asarray(sources)):
+        dist = out[row]
+        dist[s] = 0
+        frontier = np.array([s], dtype=np.int64)
+        level = 0
+        while frontier.size:
+            level += 1
+            spans = [indices[indptr[u]:indptr[u + 1]] for u in frontier]
+            nxt = np.unique(np.concatenate(spans)) if spans else np.array([], np.int64)
+            nxt = nxt[dist[nxt] < 0]
+            dist[nxt] = level
+            frontier = nxt
+    return out
+
+
+def sampled_distances(g: Graph, n_sources: int = 64,
+                      seed: int = 0) -> np.ndarray:
+    """Distances from a uniform sample of sources (for huge graphs)."""
+    rng = np.random.default_rng(seed)
+    k = min(n_sources, g.n)
+    sources = rng.choice(g.n, size=k, replace=False)
+    return bfs_distances(g, sources)

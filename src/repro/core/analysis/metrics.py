@@ -1,0 +1,76 @@
+"""Headline topology metrics: diameter, mean path length, path diversity.
+
+All exact metrics run on the dense APSP output when the router count permits
+(every assigned benchmark size does); otherwise sampled BFS estimates are
+used and flagged in the report.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..graph import Graph
+from .apsp import apsp_dense, sampled_distances
+from .histograms import path_length_histogram
+
+__all__ = ["analyze", "path_diversity"]
+
+DENSE_LIMIT = 8192  # routers; above this, sample
+
+
+def analyze(g: Graph, dense_limit: int = DENSE_LIMIT, n_sources: int = 64,
+            spectral: bool = True, use_kernel: bool = True) -> Dict:
+    """One-call EvalNet analysis: the toolchain's main entry point."""
+    report = dict(g.summary())
+    exact = g.n <= dense_limit
+    if exact:
+        dist = apsp_dense(g, use_kernel=use_kernel)
+        finite = dist[np.isfinite(dist)]
+        report["diameter"] = int(finite.max())
+        off_diag = finite.sum() / max(1, g.n * (g.n - 1))
+        report["avg_path_length"] = float(off_diag)
+        report["path_histogram"] = path_length_histogram(dist)
+        report["exact"] = True
+        report["path_diversity_mean"] = float(path_diversity(g, dist).mean())
+    else:
+        d = sampled_distances(g, n_sources=n_sources)
+        reachable = d[d >= 0]
+        report["diameter"] = int(reachable.max())  # lower bound from sample
+        report["avg_path_length"] = float(
+            reachable[reachable > 0].mean()
+        )
+        report["path_histogram"] = np.bincount(
+            reachable[reachable > 0]
+        ).tolist()
+        report["exact"] = False
+    if spectral and g.n <= 4 * dense_limit:
+        from .spectral import spectral_bounds
+
+        report.update(spectral_bounds(g))
+    return report
+
+
+def path_diversity(g: Graph, dist: Optional[np.ndarray] = None,
+                   pairs: int = 512, seed: int = 0) -> np.ndarray:
+    """Shortest-path diversity for sampled (s, t): number of neighbours w of s
+    with dist(w, t) = dist(s, t) - 1, i.e. distinct first hops on shortest
+    paths. This is the metric adaptive-routing studies care about.
+    """
+    if dist is None:
+        dist = apsp_dense(g)
+    rng = np.random.default_rng(seed)
+    indptr, indices = g.csr()
+    out = np.zeros(pairs, dtype=np.int32)
+    n = g.n
+    for i in range(pairs):
+        s = int(rng.integers(n))
+        t = int(rng.integers(n))
+        while t == s:
+            t = int(rng.integers(n))
+        nbrs = indices[indptr[s]:indptr[s + 1]]
+        if not np.isfinite(dist[s, t]):
+            out[i] = 0
+            continue
+        out[i] = int((dist[nbrs, t] == dist[s, t] - 1).sum())
+    return out

@@ -1,0 +1,6 @@
+"""Topology-aware collective cost models + mesh mapping (EvalNet → runtime)."""
+from .cost_model import (  # noqa: F401
+    AxisLink, COLLECTIVE_KINDS, HardwareModel, collective_time,
+    hierarchical_all_reduce_time,
+)
+from .mapping import MappingPlan, PhysicalFabric, plan_mesh_mapping  # noqa: F401

@@ -1,0 +1,5 @@
+"""EvalNet topology generators (router-level graphs, implicit servers)."""
+from .base import by_servers, families, make, pick_prime  # noqa: F401
+from . import dragonfly, fattree, hyperx, jellyfish, slimfly, torus, xpander  # noqa: F401
+
+__all__ = ["by_servers", "families", "make", "pick_prime"]

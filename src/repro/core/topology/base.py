@@ -1,0 +1,65 @@
+"""Topology registry + sizing helpers.
+
+Every generator is a function ``make(**params) -> Graph`` registered under a
+family name. ``by_servers`` picks parameters so the built network carries
+approximately a requested number of servers, which is how the scalability
+benchmarks (10k / 100k / 1M servers) instantiate families uniformly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from ..graph import Graph
+
+_REGISTRY: Dict[str, Callable[..., Graph]] = {}
+_SIZERS: Dict[str, Callable[[int], dict]] = {}
+
+
+def register(name: str, sizer: Callable[[int], dict] | None = None):
+    def deco(fn: Callable[..., Graph]):
+        _REGISTRY[name] = fn
+        if sizer is not None:
+            _SIZERS[name] = sizer
+        return fn
+
+    return deco
+
+
+def families() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make(name: str, **params) -> Graph:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown topology family {name!r}; known: {families()}")
+    return _REGISTRY[name](**params)
+
+
+def by_servers(name: str, n_servers: int, **overrides) -> Graph:
+    """Instantiate ``name`` sized to approximately ``n_servers`` servers."""
+    if name not in _SIZERS:
+        raise KeyError(f"family {name!r} has no sizer")
+    params = _SIZERS[name](n_servers)
+    params.update(overrides)
+    return make(name, **params)
+
+
+# -- shared helpers ---------------------------------------------------------
+
+_PRIMES = [
+    5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73,
+    79, 83, 89, 97, 101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151,
+    157, 163, 167, 173, 179, 181, 191, 193, 197, 199, 211, 223, 227, 229,
+]
+
+
+def primes_near(lo: int) -> List[int]:
+    return [p for p in _PRIMES if p >= lo]
+
+
+def pick_prime(target: int) -> int:
+    """Smallest known prime >= target (for Slim Fly / MMS parameters)."""
+    for p in _PRIMES:
+        if p >= target:
+            return p
+    raise ValueError(f"no prime table entry >= {target}")

@@ -1,0 +1,56 @@
+"""Canonical balanced Dragonfly (Kim et al., ISCA'08).
+
+Groups of ``a`` routers, fully connected inside a group; each router has
+``h`` global links; balanced sizing a = 2h, g = a*h + 1 groups, concentration
+p = h. Global link arrangement: absolute/consecutive — global port j of
+router r in group s connects toward group index (s + r*h + j + 1) mod g,
+paired with the reciprocal port.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graph import Graph
+from .base import register
+
+
+def _df_sizer(n_servers: int) -> dict:
+    # N = p * a * g = h * 2h * (2h^2 + 1) ≈ 4 h^4  =>  h ≈ (N/4)^(1/4)
+    h = max(2, int(round((n_servers / 4) ** 0.25)))
+    return {"h": h}
+
+
+@register("dragonfly", _df_sizer)
+def make_dragonfly(h: int = 4, a: int | None = None, g: int | None = None,
+                   concentration: int | None = None) -> Graph:
+    a = a if a is not None else 2 * h
+    g = g if g is not None else a * h + 1
+    p = concentration if concentration is not None else h
+    n = a * g
+    edges = []
+    # intra-group: complete graph K_a per group
+    iu, iv = np.triu_indices(a, k=1)
+    for grp in range(g):
+        base = grp * a
+        edges.append(np.stack([base + iu, base + iv], axis=1))
+    # global links: enumerate each inter-group channel once.
+    # Channel t in [0, a*h) of group s goes to group (s + t + 1) mod g; this
+    # uses each of the g-1 partner groups ceil(a*h/(g-1)) = 1 time when
+    # balanced (a*h = g-1). Router owning channel t is t // h.
+    for s in range(g):
+        for t in range(a * h):
+            d = (s + t + 1) % g
+            if not (s < d):  # each global cable once (reciprocal channel covers it)
+                continue
+            r_src = s * a + (t // h)
+            # reciprocal channel index in d that points back to s:
+            t_back = (s - d - 1) % g
+            # map channel back index into [0, a*h): balanced => t_back < a*h
+            r_dst = d * a + (t_back // h)
+            edges.append(np.array([[r_src, r_dst]], dtype=np.int64))
+    e = np.concatenate(edges, axis=0)
+    return Graph(
+        n=n, edges=e, concentration=p,
+        name=f"dragonfly(h={h})",
+        meta={"h": h, "a": a, "g": g, "diameter": 3},
+    )

@@ -1,0 +1,44 @@
+"""HyperX (Hamming graph): complete graph in each of k dimensions.
+
+Vertices are tuples in S_1 x ... x S_k; two vertices are adjacent iff they
+differ in exactly one coordinate. Generalizes hypercube (S_i = 2) and
+flattened butterfly. Diameter = number of dimensions.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..graph import Graph
+from .base import register
+
+
+def _hyperx_sizer(n_servers: int) -> dict:
+    # 2D square HyperX, concentration ~ S/2 per router: N = S^2 * S/2 = S^3/2
+    side = max(2, int(round((2 * n_servers) ** (1 / 3))))
+    return {"dims": (side, side), "concentration": max(1, side // 2)}
+
+
+@register("hyperx", _hyperx_sizer)
+def make_hyperx(dims: Sequence[int] = (8, 8), concentration: int = 4) -> Graph:
+    dims = tuple(int(d) for d in dims)
+    n = int(np.prod(dims))
+    coords = np.indices(dims).reshape(len(dims), -1).T
+    strides = np.array([int(np.prod(dims[i + 1:])) for i in range(len(dims))])
+    ids = coords @ strides
+    edges = []
+    for axis, size in enumerate(dims):
+        for delta in range(1, size):
+            nxt = coords.copy()
+            nxt[:, axis] = nxt[:, axis] + delta
+            keep = nxt[:, axis] < size  # each unordered pair once
+            u = ids[keep]
+            v = nxt[keep] @ strides
+            edges.append(np.stack([u, v], axis=1))
+    e = np.concatenate(edges, axis=0)
+    return Graph(
+        n=n, edges=e, concentration=concentration,
+        name=f"hyperx{dims}",
+        meta={"dims": dims, "diameter": len([d for d in dims if d > 1])},
+    )

@@ -1,0 +1,62 @@
+"""Jellyfish: random r-regular graph (Singla et al., NSDI'12).
+
+Stub-matching with a repair pass: after random pairing, invalid pairs (self
+loops / duplicates) are fixed by edge swaps. For the sizes used here the
+repair converges in a handful of sweeps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graph import Graph
+from .base import register
+
+
+def _jf_sizer(n_servers: int) -> dict:
+    # mirror the slim fly cost point: radix ~ 3q/2, half ports to servers.
+    # N = n_r * p with p = r/2 and r ≈ 1.5 * (N/1.5)^(1/3)
+    q = max(5, round((n_servers / 1.5) ** (1 / 3)))
+    r = max(4, int(round(1.5 * q)))
+    n_r = max(r + 1, int(round(n_servers / max(1, r // 2))))
+    return {"n": n_r, "r": r, "concentration": max(1, r // 2)}
+
+
+@register("jellyfish", _jf_sizer)
+def make_jellyfish(n: int, r: int, concentration: int = 1, seed: int = 0) -> Graph:
+    if n * r % 2 != 0:
+        n += 1  # need even stub count
+    if r >= n:
+        raise ValueError(f"need r < n, got r={r} n={n}")
+    rng = np.random.default_rng(seed)
+
+    for attempt in range(16):
+        stubs = np.repeat(np.arange(n, dtype=np.int64), r)
+        rng.shuffle(stubs)
+        e = stubs.reshape(-1, 2)
+        # repair pass: resolve self loops and duplicate edges by swapping
+        for _ in range(64):
+            lo = np.minimum(e[:, 0], e[:, 1])
+            hi = np.maximum(e[:, 0], e[:, 1])
+            key = lo * n + hi
+            order = np.argsort(key)
+            sorted_key = key[order]
+            dup = np.zeros(len(e), dtype=bool)
+            dup[order[1:]] = sorted_key[1:] == sorted_key[:-1]
+            bad = dup | (e[:, 0] == e[:, 1])
+            nbad = int(bad.sum())
+            if nbad == 0:
+                break
+            bad_idx = np.nonzero(bad)[0]
+            partners = rng.choice(len(e), size=nbad, replace=False)
+            # swap second endpoints between bad edges and random partners
+            e[bad_idx, 1], e[partners, 1] = (
+                e[partners, 1].copy(), e[bad_idx, 1].copy(),
+            )
+        else:
+            continue  # repair did not converge; reshuffle
+        g = Graph(n=n, edges=e, concentration=concentration,
+                  name=f"jellyfish(n={n},r={r})",
+                  meta={"r": r, "seed": seed, "attempt": attempt})
+        if g.num_edges == n * r // 2 and g.is_connected():
+            return g
+    raise RuntimeError(f"jellyfish(n={n}, r={r}) generation failed")

@@ -1,0 +1,63 @@
+"""k-ary n-cube torus — the TPU ICI fabric model.
+
+A v5e pod is a 16x16 2D torus of chips; v4/v5p pods are 3D tori. In this
+framework the torus generator doubles as (a) an EvalNet topology family and
+(b) the physical model behind the collective cost model (`core.collectives`).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..graph import Graph
+from .base import register
+
+
+def _torus_sizer(n_servers: int) -> dict:
+    # one "server" (chip) per router; square 2D torus
+    side = max(2, int(round(np.sqrt(n_servers))))
+    return {"dims": (side, side), "concentration": 1}
+
+
+@register("torus", _torus_sizer)
+def make_torus(dims: Sequence[int] = (16, 16), concentration: int = 1,
+               wrap: bool = True) -> Graph:
+    dims = tuple(int(d) for d in dims)
+    n = int(np.prod(dims))
+    coords = np.indices(dims).reshape(len(dims), -1).T  # (n, ndim)
+    strides = np.array([int(np.prod(dims[i + 1:])) for i in range(len(dims))])
+    edges = []
+    for axis, size in enumerate(dims):
+        if size < 2:
+            continue
+        nxt = coords.copy()
+        nxt[:, axis] = (nxt[:, axis] + 1) % size
+        u = coords @ strides
+        v = nxt @ strides
+        if not wrap:
+            keep = coords[:, axis] + 1 < size
+            u, v = u[keep], v[keep]
+        elif size == 2:
+            # avoid double edge on rings of length 2
+            keep = coords[:, axis] == 0
+            u, v = u[keep], v[keep]
+        edges.append(np.stack([u, v], axis=1))
+    e = np.concatenate(edges, axis=0) if edges else np.zeros((0, 2), np.int64)
+    diam = sum((d // 2 if wrap else d - 1) for d in dims)
+    return Graph(
+        n=n, edges=e, concentration=concentration,
+        name=f"torus{dims}", meta={"dims": dims, "wrap": wrap, "diameter": diam},
+    )
+
+
+@register("hypercube", lambda s: {"dim": max(1, int(np.ceil(np.log2(max(s, 2)))))})
+def make_hypercube(dim: int, concentration: int = 1) -> Graph:
+    n = 1 << dim
+    ids = np.arange(n, dtype=np.int64)
+    edges = [np.stack([ids, ids ^ (1 << b)], axis=1) for b in range(dim)]
+    e = np.concatenate(edges, axis=0)
+    return Graph(
+        n=n, edges=e, concentration=concentration,
+        name=f"hypercube({dim})", meta={"dim": dim, "diameter": dim},
+    )

@@ -1,0 +1,44 @@
+"""Xpander (Valadarsky et al., HotNets'15): expander via repeated 2-lifts.
+
+Start from the complete graph K_{r+1} (the best r-regular expander) and apply
+random 2-lifts: each lift doubles the vertex count; every edge (u, v) is
+replaced, uniformly at random, by either the parallel pair ((u,0),(v,0)),
+((u,1),(v,1)) or the crossed pair ((u,0),(v,1)), ((u,1),(v,0)). Degree is
+preserved; spectral expansion degrades only slightly per lift (Bilu-Linial).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graph import Graph
+from .base import register
+
+
+def _xp_sizer(n_servers: int) -> dict:
+    q = max(5, round((n_servers / 1.5) ** (1 / 3)))
+    r = max(4, int(round(1.5 * q)))
+    p = max(1, r // 2)
+    n_target = max(r + 1, n_servers // p)
+    lifts = max(0, int(np.ceil(np.log2(n_target / (r + 1)))))
+    return {"r": r, "lifts": lifts, "concentration": p}
+
+
+@register("xpander", _xp_sizer)
+def make_xpander(r: int, lifts: int, concentration: int = 1, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    n = r + 1
+    iu, iv = np.triu_indices(n, k=1)
+    e = np.stack([iu, iv], axis=1).astype(np.int64)
+    for _ in range(lifts):
+        cross = rng.integers(0, 2, size=len(e)).astype(np.int64)
+        u, v = e[:, 0], e[:, 1]
+        # copy 0 edge: (u, v + cross*n) ; copy 1 edge: (u + n, v + (1-cross)*n)
+        e0 = np.stack([u, v + cross * n], axis=1)
+        e1 = np.stack([u + n, v + (1 - cross) * n], axis=1)
+        e = np.concatenate([e0, e1], axis=0)
+        n *= 2
+    return Graph(
+        n=n, edges=e, concentration=concentration,
+        name=f"xpander(r={r},lifts={lifts})",
+        meta={"r": r, "lifts": lifts, "seed": seed},
+    )

@@ -1,0 +1,106 @@
+"""Synthetic traffic workloads for topology evaluation.
+
+Traffic matrices over routers (servers implicit): permutation (all flows of a
+server share a destination — the load-balancing stress case), uniform random,
+and skewed (zipf) patterns. `evaluate_workload` routes sampled flows over
+shortest paths and reports link-load statistics — the EvalNet analogue of
+comparing topologies under load, and the input signal for
+`collectives.mapping` traffic mixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .graph import Graph
+from .analysis.apsp import apsp_dense, bfs_distances
+
+__all__ = ["Workload", "make_traffic", "evaluate_workload"]
+
+
+@dataclasses.dataclass
+class Workload:
+    """pairs: (F, 2) router indices (src, dst); volume: bytes per flow."""
+
+    pairs: np.ndarray
+    volume: float = 1.0
+    name: str = "workload"
+
+
+def make_traffic(g: Graph, pattern: str = "permutation", flows: int = 4096,
+                 seed: int = 0, zipf_a: float = 1.3) -> Workload:
+    rng = np.random.default_rng(seed)
+    n = g.n
+    if pattern == "permutation":
+        perm = rng.permutation(n)
+        # fixed random permutation: all flows of router i target perm[i]
+        src = rng.integers(0, n, size=flows)
+        dst = perm[src]
+    elif pattern == "uniform":
+        src = rng.integers(0, n, size=flows)
+        dst = rng.integers(0, n, size=flows)
+    elif pattern == "skewed":
+        # zipf-distributed destination popularity: hotspot traffic
+        src = rng.integers(0, n, size=flows)
+        ranks = (rng.zipf(zipf_a, size=flows) - 1) % n
+        dst = rng.permutation(n)[ranks]
+    else:
+        raise ValueError(f"unknown pattern {pattern!r}")
+    keep = src != dst
+    return Workload(pairs=np.stack([src[keep], dst[keep]], axis=1),
+                    name=f"{pattern}(flows={flows})")
+
+
+def _route_next_hops(g: Graph, dist: np.ndarray, src: int, dst: int,
+                     rng: np.random.Generator) -> list:
+    """Random shortest path src->dst using the distance matrix as oracle."""
+    indptr, indices = g.csr()
+    path = [src]
+    u = src
+    guard = 0
+    while u != dst:
+        nbrs = indices[indptr[u]:indptr[u + 1]]
+        good = nbrs[dist[nbrs, dst] == dist[u, dst] - 1]
+        u = int(rng.choice(good))
+        path.append(u)
+        guard += 1
+        if guard > g.n:
+            raise RuntimeError("routing loop; distance matrix inconsistent")
+    return path
+
+
+def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
+                      seed: int = 0) -> Dict:
+    """Route every flow on a random shortest path; report link loads.
+
+    max_link_load (flows across the most loaded link, normalized by the mean)
+    approximates the inverse saturation throughput of the pattern.
+    """
+    if dist is None:
+        dist = apsp_dense(g)
+    rng = np.random.default_rng(seed)
+    loads: Dict = {}
+    hop_total = 0
+    for src, dst in wl.pairs:
+        path = _route_next_hops(g, dist, int(src), int(dst), rng)
+        hop_total += len(path) - 1
+        for a, b in zip(path[:-1], path[1:]):
+            key = (a, b) if a < b else (b, a)
+            loads[key] = loads.get(key, 0) + 1
+    if not loads:
+        return {"flows": 0}
+    vals = np.array(list(loads.values()), dtype=np.float64)
+    return {
+        "workload": wl.name,
+        "topology": g.name,
+        "flows": int(len(wl.pairs)),
+        "avg_hops": hop_total / len(wl.pairs),
+        "links_used": int(len(vals)),
+        "links_total": g.num_edges,
+        "max_link_load": float(vals.max()),
+        "mean_link_load": float(vals.mean()),
+        "p99_link_load": float(np.percentile(vals, 99)),
+        "load_imbalance": float(vals.max() / vals.mean()),
+    }

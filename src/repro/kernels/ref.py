@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert_allclose kernel vs these references.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["minplus_matmul_ref", "reachability_step_ref", "value_histogram_ref"]
+
+
+def minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tropical (min, +) matrix product: out[i,j] = min_k a[i,k] + b[k,j]."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def reachability_step_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Boolean semiring product: out[i,j] = OR_k (a[i,k] AND b[k,j]).
+
+    Inputs/outputs are {0,1}-valued float32 masks.
+    """
+    counts = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    return (counts > 0.5).astype(jnp.float32)
+
+
+def value_histogram_ref(x: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    """Histogram of floor(x) into bins [0, num_bins); non-finite and
+    out-of-range values are dropped. Returns int32 counts (num_bins,)."""
+    xf = x.reshape(-1)
+    valid = jnp.isfinite(xf) & (xf >= 0) & (xf < num_bins)
+    idx = jnp.where(valid, xf.astype(jnp.int32), num_bins)  # overflow bin
+    counts = jnp.zeros((num_bins + 1,), jnp.int32).at[idx].add(1)
+    return counts[:num_bins]

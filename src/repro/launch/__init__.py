@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, train/serve."""
+from . import mesh  # noqa: F401

@@ -1,0 +1,2 @@
+"""Model zoo: composable attention/MLP/MoE/SSD modules + LM/enc-dec assembly."""
+from . import attention, common, encdec, mlp, moe, ssm, steps, transformer  # noqa: F401

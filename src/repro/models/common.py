@@ -1,0 +1,110 @@
+"""Shared model plumbing: parameter specs, norms, RoPE, initialization.
+
+Modules describe parameters as trees of `Spec` (shape + logical axes + init).
+One tree drives three consumers:
+  * `init_params`      — real arrays for smoke tests / examples,
+  * `abstract_params`  — ShapeDtypeStructs for the dry-run,
+  * `sharding/rules`   — logical axes → PartitionSpec.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Spec", "init_params", "abstract_params", "axes_tree",
+    "rms_norm", "layer_norm", "apply_rope", "sinusoidal_positions",
+]
+
+
+class Spec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (None = replicated)
+    init: str = "normal"             # normal | zeros | ones
+    scale: Optional[float] = None    # stddev; default fan-in
+
+    def stddev(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(key: jax.Array, specs: Any, dtype=jnp.float32) -> Any:
+    """Materialize a Spec tree into arrays (deterministic per tree path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    out = []
+    for i, s in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if s.init == "zeros":
+            arr = jnp.zeros(s.shape, dtype)
+        elif s.init == "ones":
+            arr = jnp.ones(s.shape, dtype)
+        else:
+            arr = (jax.random.normal(k, s.shape, jnp.float32) * s.stddev()).astype(dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=_is_spec
+    )
+
+
+def axes_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# -- positions ----------------------------------------------------------------
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    assert d % 2 == 0, "head_dim must be even for RoPE"
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position table (seq, dim)."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

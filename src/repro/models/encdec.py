@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: `input_specs()` feeds
+precomputed frame embeddings (B, enc_seq, d_model). The encoder is a
+bidirectional transformer over frames (+ sinusoidal positions); the decoder
+is a causal transformer with per-layer cross-attention into the encoder
+output. Decode keeps a self-attention KV cache plus precomputed cross KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mlp
+from .common import Spec, layer_norm, sinusoidal_positions
+from .transformer import _apply_norm, _norm_specs, _remat_policy, _stack, logits_from_hidden
+
+__all__ = [
+    "param_specs", "encode", "forward", "lm_loss_encdec", "prefill",
+    "decode_step", "init_decode_caches",
+]
+
+
+def _enc_layer_specs(cfg, r: int) -> Dict:
+    return {
+        "norm1": _norm_specs(cfg, r),
+        "attn": _stack(attention.param_specs(cfg), r),
+        "norm2": _norm_specs(cfg, r),
+        "mlp": _stack(mlp.param_specs(cfg), r),
+    }
+
+
+def _dec_layer_specs(cfg, r: int) -> Dict:
+    return {
+        "norm1": _norm_specs(cfg, r),
+        "attn": _stack(attention.param_specs(cfg), r),
+        "norm_x": _norm_specs(cfg, r),
+        "xattn": _stack(attention.param_specs(cfg, cross=True), r),
+        "norm2": _norm_specs(cfg, r),
+        "mlp": _stack(mlp.param_specs(cfg), r),
+    }
+
+
+def param_specs(cfg) -> Dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": Spec((v, d), ("vocab", "embed"), scale=0.02),
+        "enc_layers": _enc_layer_specs(cfg, cfg.n_enc_layers),
+        "enc_norm": {"w": Spec((d,), ("embed",), init="ones"),
+                     "b": Spec((d,), ("embed",), init="zeros")},
+        "dec_layers": _dec_layer_specs(cfg, cfg.n_layers),
+        "final_norm": {"w": Spec((d,), ("embed",), init="ones"),
+                       "b": Spec((d,), ("embed",), init="zeros")},
+    }
+
+
+def _norm(np_, x, cfg):
+    # whisper uses LayerNorm; stacked specs carry a leading layer dim that
+    # the scan strips, so this matches transformer._apply_norm semantics.
+    return _apply_norm(np_, x, cfg)
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg) -> jnp.ndarray:
+    """frames: (B, S_enc, D) stubbed frontend output -> encoder hidden."""
+    s = frames.shape[1]
+    x = frames + sinusoidal_positions(s, cfg.d_model)[None].astype(frames.dtype)
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = _norm(lp["norm1"], x, cfg)
+        y, _ = attention.self_attention(
+            lp["attn"], h, positions, cfg, causal=False, use_rope=False,
+        )
+        x = x + y
+        h2 = _norm(lp["norm2"], x, cfg)
+        x = x + mlp.mlp(lp["mlp"], h2, cfg)
+        return x, None
+
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layer_norm(x, params["enc_norm"]["w"], params["enc_norm"]["b"])
+
+
+def forward(params: Dict, frames: jnp.ndarray, tokens: jnp.ndarray, cfg):
+    """Training forward: returns (decoder hidden (B, S, D), aux=0)."""
+    mem = encode(params, frames, cfg)
+    x = params["embed"][tokens]
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = _norm(lp["norm1"], x, cfg)
+        y, _ = attention.self_attention(lp["attn"], h, positions, cfg, causal=True)
+        x = x + y
+        hx = _norm(lp["norm_x"], x, cfg)
+        x = x + attention.cross_attention(lp["xattn"], hx, attention.memory_kv(lp["xattn"], mem), cfg)
+        h2 = _norm(lp["norm2"], x, cfg)
+        x = x + mlp.mlp(lp["mlp"], h2, cfg)
+        return x, None
+
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def init_decode_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+    return {
+        "self": {
+            "k": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((L, batch, cfg.enc_seq, kv, hd), dtype),
+            "v": jnp.zeros((L, batch, cfg.enc_seq, kv, hd), dtype),
+        },
+    }
+
+
+def prefill(params: Dict, frames: jnp.ndarray, tokens: jnp.ndarray, cfg):
+    """Encode + run the decoder prompt; return (last logits, caches)."""
+    mem = encode(params, frames, cfg)
+    x = params["embed"][tokens]
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = _norm(lp["norm1"], x, cfg)
+        y, (k, v) = attention.self_attention(lp["attn"], h, positions, cfg, causal=True)
+        x = x + y
+        xk, xv = attention.memory_kv(lp["xattn"], mem)
+        hx = _norm(lp["norm_x"], x, cfg)
+        x = x + attention.cross_attention(lp["xattn"], hx, (xk, xv), cfg)
+        h2 = _norm(lp["norm2"], x, cfg)
+        x = x + mlp.mlp(lp["mlp"], h2, cfg)
+        cache = {
+            "self": {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)},
+            "cross": {"k": xk.astype(jnp.bfloat16), "v": xv.astype(jnp.bfloat16)},
+        }
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    logits = logits_from_hidden(params, x[:, -1:, :], cfg)
+    return logits, caches
+
+
+def decode_step(params: Dict, token: jnp.ndarray, caches: Dict,
+                cache_pos: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """token: (B, 1). caches: {"self": {k,v (L,B,S,KV,hd)}, "cross": ...}."""
+    x = params["embed"][token]
+
+    def body(x, layer_in):
+        lp, cache = layer_in
+        h = _norm(lp["norm1"], x, cfg)
+        y, new_self = attention.decode_attention(
+            lp["attn"], h, cache["self"], cache_pos, cfg,
+        )
+        x = x + y
+        hx = _norm(lp["norm_x"], x, cfg)
+        x = x + attention.cross_attention(
+            lp["xattn"], hx, (cache["cross"]["k"], cache["cross"]["v"]), cfg,
+        )
+        h2 = _norm(lp["norm2"], x, cfg)
+        x = x + mlp.mlp(lp["mlp"], h2, cfg)
+        return x, {"self": new_self, "cross": cache["cross"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, new_caches

@@ -1,0 +1,44 @@
+"""Gated/plain feed-forward blocks (SwiGLU / GeGLU / GELU)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import Spec
+
+__all__ = ["param_specs", "mlp"]
+
+
+def param_specs(cfg, d_ff: int | None = None) -> Dict[str, Spec]:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi": Spec((d, f), ("embed", "mlp")),
+            "wg": Spec((d, f), ("embed", "mlp")),
+            "wo": Spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": Spec((d, f), ("embed", "mlp")),
+        "wo": Spec((f, d), ("mlp", "embed")),
+    }
+
+
+def _act(cfg):
+    if cfg.act == "swiglu":
+        return jax.nn.silu
+    if cfg.act == "geglu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    return lambda x: jax.nn.gelu(x, approximate=True)
+
+
+def mlp(p: Dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    act = _act(cfg)
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if "wg" in p:
+        h = act(jnp.einsum("...d,df->...f", x, p["wg"])) * h
+    else:
+        h = act(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

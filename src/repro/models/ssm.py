@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD — state-space duality) mixer: chunked train/prefill scan and
+O(1)-state decode.
+
+The SSD computation streams over sequence chunks with a lax.scan carrying the
+(B, H, P, N) inter-chunk state, so the per-chunk decay matrix L (B, H, Q, Q)
+is the largest live intermediate — this is what makes 4k..32k training
+sequences and 500k decode feasible at Jamba width (DESIGN.md §6).
+
+Decode keeps two buffers per layer: the SSM state (B, H, P, N) and the causal
+depthwise-conv tail (B, K-1, conv_dim).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Spec, rms_norm
+
+__all__ = ["param_specs", "ssd_forward", "ssd_decode", "init_decode_state"]
+
+
+def param_specs(cfg) -> Dict[str, Spec]:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_nheads
+    k = cfg.ssm_conv
+    conv_dim = di + 2 * g * n
+    return {
+        "wz": Spec((d, di), ("embed", "ssm_inner")),
+        "wx": Spec((d, di), ("embed", "ssm_inner")),
+        "wB": Spec((d, g * n), ("embed", None)),
+        "wC": Spec((d, g * n), ("embed", None)),
+        "wdt": Spec((d, h), ("embed", "ssm_heads")),
+        "dt_bias": Spec((h,), ("ssm_heads",), init="zeros"),
+        "A_log": Spec((h,), ("ssm_heads",), init="ones"),
+        "D": Spec((h,), ("ssm_heads",), init="ones"),
+        "conv_w": Spec((k, conv_dim), (None, None), scale=1.0 / math.sqrt(k)),
+        "conv_b": Spec((conv_dim,), (None,), init="zeros"),
+        "norm_w": Spec((di,), ("ssm_inner",), init="zeros"),
+        "wo": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled shifted adds beat conv lowering
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) -> (..., Q, Q) with out[..., i, j] = sum_{j<k<=i} a[..., k],
+    -inf above the diagonal (so exp() gives the lower-tri decay matrix)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _split_proj(p, u, cfg):
+    """u: (B, S, D) -> z, xbc(conv'd), dt  with shapes per SSD."""
+    z = jnp.einsum("bsd,de->bse", u, p["wz"])
+    x = jnp.einsum("bsd,de->bse", u, p["wx"])
+    Bp = jnp.einsum("bsd,de->bse", u, p["wB"])
+    Cp = jnp.einsum("bsd,de->bse", u, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", u, p["wdt"])
+    xbc = jnp.concatenate([x, Bp, Cp], axis=-1)
+    return z, xbc, dt
+
+
+def _unpack_xbc(xbc, cfg):
+    di = cfg.ssm_d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    x = xbc[..., :di]
+    Bp = xbc[..., di:di + g * n]
+    Cp = xbc[..., di + g * n:]
+    return x, Bp, Cp
+
+
+def ssd_forward(p: Dict, u: jnp.ndarray, cfg, return_state: bool = False):
+    """Full-sequence SSD. u: (B, S, D) -> (B, S, D). S % ssm_chunk == 0
+    (enforced by padding in the caller if needed).
+
+    return_state=True additionally returns the decode buffers
+    {"ssm": (B, H, P, N), "conv": (B, K-1, conv_dim)} for serving prefill."""
+    b, s, _ = u.shape
+    h, pdim = cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    z, xbc_raw, dt = _split_proj(p, u, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x, Bp, Cp = _unpack_xbc(xbc, cfg)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    xh = x.reshape(b, s, h, pdim)
+    Bh = Bp.reshape(b, s, g, n)
+    Ch = Cp.reshape(b, s, g, n)
+    rep = h // g
+
+    # chunked streaming scan
+    def to_chunks(t):
+        return t.reshape(b, nc, q, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    xc = to_chunks(xh)    # (nc, b, q, h, p)
+    Bc = to_chunks(Bh)    # (nc, b, q, g, n)
+    Cc = to_chunks(Ch)
+    dtc = to_chunks(dt)   # (nc, b, q, h)
+
+    def chunk_step(state, inp):
+        xq, Bq, Cq, dtq = inp
+        a = dtq * A                                   # (b, q, h) log-decay
+        a_t = a.transpose(0, 2, 1)                    # (b, h, q)
+        a_cs = jnp.cumsum(a_t, axis=-1)               # (b, h, q)
+        L = jnp.exp(_segsum(a_t))                     # (b, h, q, q)
+        Bq_h = jnp.repeat(Bq, rep, axis=2)            # (b, q, h, n)
+        Cq_h = jnp.repeat(Cq, rep, axis=2)
+        xdt = xq.astype(jnp.float32) * dtq[..., None]  # (b, q, h, p)
+        # intra-chunk (diagonal block)
+        scores = jnp.einsum("blhn,bshn->bhls", Cq_h, Bq_h,
+                            preferred_element_type=jnp.float32)
+        y_diag = jnp.einsum("bhls,bhls,bshp->blhp", scores, L,
+                            xdt.transpose(0, 1, 2, 3),
+                            preferred_element_type=jnp.float32)
+        # contribution of carried state
+        state_decay = jnp.exp(a_cs)                   # (b, h, q)
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", Cq_h, state,
+                           state_decay.transpose(0, 1, 2),
+                           preferred_element_type=jnp.float32)
+        # new chunk state
+        decay_to_end = jnp.exp(a_cs[..., -1:] - a_cs)  # (b, h, q)
+        contrib = jnp.einsum("bshn,bhs,bshp->bhpn", Bq_h, decay_to_end, xdt,
+                             preferred_element_type=jnp.float32)
+        state = state * jnp.exp(a_cs[..., -1])[..., None, None] + contrib
+        return state, (y_diag + y_off).astype(u.dtype)
+
+    state0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    # checkpoint the chunk body: differentiating the chunk scan then only
+    # stacks the (B, H, P, N) carry per chunk instead of the (B, H, Q, Q)
+    # decay matrices — L is recomputed in the backward pass.
+    chunk_step_ckpt = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    final_state, yc = jax.lax.scan(chunk_step_ckpt, state0, (xc, Bc, Cc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, pdim)
+    y = y + xh.astype(jnp.float32).astype(u.dtype) * p["D"].astype(u.dtype)[None, None, :, None]
+    y = y.reshape(b, s, h * pdim)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype), p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    if return_state:
+        k = cfg.ssm_conv
+        tail = xbc_raw[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (k - 1 - s, 0), (0, 0)))
+        return out, {"ssm": final_state, "conv": tail.astype(jnp.bfloat16)}
+    return out
+
+
+def init_decode_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    h, pdim, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, h, pdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode(p: Dict, u: jnp.ndarray, state: Dict, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token step. u: (B, 1, D) -> (y (B, 1, D), new state)."""
+    b = u.shape[0]
+    h, pdim = cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z, xbc, dt = _split_proj(p, u, cfg)                  # (b, 1, *)
+    # causal conv via rolling buffer
+    window = jnp.concatenate([state["conv"], xbc.astype(state["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc_t = jax.nn.silu(conv_out)[:, None, :].astype(u.dtype)
+    new_conv = window[:, 1:, :]
+
+    x, Bp, Cp = _unpack_xbc(xbc_t, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (b, h)
+    dA = jnp.exp(dtv * A)                                 # (b, h)
+    xh = x[:, 0].reshape(b, h, pdim).astype(jnp.float32)
+    Bh = jnp.repeat(Bp[:, 0].reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cp[:, 0].reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+
+    new_ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dtv[..., None], Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, h * pdim).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype), p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    return out, {"ssm": new_ssm, "conv": new_conv}

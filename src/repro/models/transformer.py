@@ -1,0 +1,355 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid, one code path.
+
+The layer stack runs as a lax.scan over the smallest repeating layer pattern
+(`cfg.layer_groups()`), so Jamba's 8-layer period and a homogeneous dense
+stack compile to equally flat HLO. Each pattern element is (mixer, ffn) with
+mixer ∈ {attn, ssm} and ffn ∈ {mlp, moe, none}.
+
+Entry points:
+  forward(...)        — hidden states (training / prefill)
+  lm_loss(...)        — chunked-vocab cross entropy (+ MoE aux)
+  prefill(...)        — forward + decode caches
+  decode_step(...)    — single-token serve step over caches
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mlp, moe, ssm
+from .common import Spec, rms_norm, layer_norm
+
+__all__ = [
+    "param_specs", "forward", "lm_loss", "prefill", "decode_step",
+    "init_decode_caches",
+]
+
+
+# -- parameter specs ---------------------------------------------------------
+
+def _norm_specs(cfg, stacked: int) -> Dict[str, Spec]:
+    d = cfg.d_model
+    if cfg.norm == "rms":
+        return {"w": Spec((stacked, d), ("layers", "embed"), init="zeros")}
+    return {
+        "w": Spec((stacked, d), ("layers", "embed"), init="ones"),
+        "b": Spec((stacked, d), ("layers", "embed"), init="zeros"),
+    }
+
+
+def _stack(specs: Any, r: int) -> Any:
+    return jax.tree.map(
+        lambda s: Spec((r,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def _layer_specs(cfg, mixer: str, ffn: str, r: int) -> Dict:
+    out: Dict[str, Any] = {"norm1": _norm_specs(cfg, r)}
+    if mixer == "attn":
+        out["attn"] = _stack(attention.param_specs(cfg), r)
+    elif mixer == "ssm":
+        out["ssm"] = _stack(ssm.param_specs(cfg), r)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        out["norm2"] = _norm_specs(cfg, r)
+        if ffn == "moe":
+            out["moe"] = _stack(moe.param_specs(cfg), r)
+        else:
+            out["mlp"] = _stack(mlp.param_specs(cfg), r)
+    return out
+
+
+def param_specs(cfg) -> Dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    (pattern, repeats), = cfg.layer_groups()
+    specs: Dict[str, Any] = {
+        "embed": Spec((v, d), ("vocab", "embed"), scale=0.02),
+        "layers": {
+            f"l{i}": _layer_specs(cfg, mx, ff, repeats)
+            for i, (mx, ff) in enumerate(pattern)
+        },
+        "final_norm": jax.tree.map(
+            lambda s: Spec(s.shape[1:], s.axes[1:], s.init, s.scale),
+            _norm_specs(cfg, 1), is_leaf=lambda x: isinstance(x, Spec),
+        ),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = Spec((d, v), ("embed", "vocab"), scale=0.02)
+    return specs
+
+
+def _apply_norm(np_, x, cfg):
+    if cfg.norm == "rms":
+        return rms_norm(x, np_["w"])
+    return layer_norm(x, np_["w"], np_["b"])
+
+
+# -- forward -----------------------------------------------------------------
+
+def _remat_policy(cfg):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _layer_body(lp: Dict, x: jnp.ndarray, positions, *, cfg, pattern_elem,
+                prefix_len: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    from ..sharding.partition import maybe_constrain
+
+    mixer, ffn = pattern_elem
+    aux = jnp.zeros((), jnp.float32)
+    x = maybe_constrain(x)
+    h = _apply_norm(lp["norm1"], x, cfg)
+    if mixer == "attn":
+        y, _ = attention.self_attention(
+            lp["attn"], h, positions, cfg, causal=True, prefix_len=prefix_len,
+        )
+        x = x + y
+    else:
+        x = x + ssm.ssd_forward(lp["ssm"], h, cfg)
+    if ffn != "none":
+        h2 = _apply_norm(lp["norm2"], x, cfg)
+        if ffn == "moe":
+            y2, aux = moe.moe(lp["moe"], h2, cfg)
+        else:
+            y2 = mlp.mlp(lp["mlp"], h2, cfg)
+        x = x + y2
+    return maybe_constrain(x), aux
+
+
+def embed_tokens(params, tokens, cfg):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg, *,
+            prefix_embeds: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) -> (hidden (B, S', D), moe_aux scalar).
+
+    prefix_embeds: (B, P, D) prepended (PaliGemma image stub); output length
+    S' = P + S.
+    """
+    from ..sharding.partition import maybe_constrain
+
+    x = embed_tokens(params, tokens, cfg)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    x = maybe_constrain(x)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    (pattern, repeats), = cfg.layer_groups()
+
+    policy = _remat_policy(cfg)
+
+    def body(carry, lp):
+        x = carry
+        aux = jnp.zeros((), jnp.float32)
+        for i, elem in enumerate(pattern):
+            layer = functools.partial(
+                _layer_body, cfg=cfg, pattern_elem=elem, prefix_len=prefix_len)
+            if policy is not None:
+                # per-layer remat: backward recomputes ONE layer at a time,
+                # so peak live memory is a single layer's intermediates even
+                # for long heterogeneous patterns (Jamba: 8-layer period)
+                layer = jax.checkpoint(layer, policy=policy)
+            x, a = layer(lp[f"l{i}"], x, positions)
+            aux = aux + a
+        return x, aux
+
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = _apply_norm(params["final_norm"], x, cfg)
+    return x, jnp.sum(auxs)
+
+
+def logits_from_hidden(params, h, cfg):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, params["embed"])
+    return jnp.einsum("...d,dv->...v", h, params["lm_head"])
+
+
+# -- loss --------------------------------------------------------------------
+
+def lm_loss(params: Dict, hidden: jnp.ndarray, labels: jnp.ndarray, cfg,
+            moe_aux: jnp.ndarray = 0.0, aux_weight: float = 0.01):
+    """Chunked-vocab cross entropy. labels: (B, S) int32, -1 = ignore.
+
+    Chunks along the SEQUENCE dim (batch-major) so the batch sharding stays
+    fixed across the scan (no resharding) and the full (B, S, V) f32 logits
+    tensor never exists: per step the live tensor is (B, c_s, V_shard).
+    """
+    b, s, d = hidden.shape
+    c_s = max(1, min(s, cfg.loss_chunk // max(b, 1)))
+    pad = (-s) % c_s
+    h, y = hidden, labels
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)), constant_values=-1)
+    nc = h.shape[1] // c_s
+    hb = h.reshape(b, nc, c_s, d).transpose(1, 0, 2, 3)   # (nc, B, c_s, D)
+    yb = y.reshape(b, nc, c_s).transpose(1, 0, 2)
+
+    def chunk(carry, inp):
+        loss_sum, tok_sum = carry
+        hc, yc = inp                                       # (B, c_s, D/.)
+        logits = logits_from_hidden(params, hc, cfg).astype(jnp.float32)
+        if cfg.logit_softcap > 0.0:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.clip(yc, 0, cfg.padded_vocab - 1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        m = (yc >= 0).astype(jnp.float32)
+        return (loss_sum + jnp.sum((lse - ll) * m), tok_sum + jnp.sum(m)), None
+
+    chunk_fn = jax.checkpoint(chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    (loss_sum, tok_sum), _ = jax.lax.scan(
+        chunk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hb, yb),
+    )
+    nll = loss_sum / jnp.maximum(tok_sum, 1.0)
+    return nll + aux_weight * moe_aux, nll
+
+
+# -- decode ------------------------------------------------------------------
+
+def init_decode_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    (pattern, repeats), = cfg.layer_groups()
+    caches: Dict[str, Any] = {}
+    for i, (mixer, _ffn) in enumerate(pattern):
+        if mixer == "attn":
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            if cfg.kv_cache_dtype == "int8":
+                # KIVI-style per-(token, head) symmetric int8 quantization:
+                # 2x memory + 2x HBM read bandwidth vs bf16
+                caches[f"l{i}"] = {
+                    "k": jnp.zeros((repeats, batch, max_len, kv, hd), jnp.int8),
+                    "v": jnp.zeros((repeats, batch, max_len, kv, hd), jnp.int8),
+                    "k_scale": jnp.zeros((repeats, batch, max_len, kv, 1), jnp.bfloat16),
+                    "v_scale": jnp.zeros((repeats, batch, max_len, kv, 1), jnp.bfloat16),
+                }
+                continue
+            caches[f"l{i}"] = {
+                "k": jnp.zeros((repeats, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((repeats, batch, max_len, kv, hd), dtype),
+            }
+        else:
+            st = ssm.init_decode_state(cfg, batch, dtype)
+            caches[f"l{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape), st
+            )
+    return caches
+
+
+def decode_step(params: Dict, token: jnp.ndarray, caches: Dict,
+                cache_pos: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """token: (B, 1) int32; cache_pos: scalar int32 (next write slot).
+
+    Returns (logits (B, 1, V), new caches).
+    """
+    from ..sharding.partition import current_plan
+
+    x = embed_tokens(params, token, cfg)
+    (pattern, repeats), = cfg.layer_groups()
+
+    plan = current_plan()
+    replicate_stream = (cfg.decode_stream == "replicated" and plan is not None)
+
+    def _stream(x):
+        if replicate_stream:
+            # weight-stationary serving: the (B, 1, D) stream is ~MB-scale;
+            # replicating it over `data` lets every FSDP-sharded weight stay
+            # put (partial-sum einsums) instead of being gathered per token.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(plan.mesh, P(None, None, None)))
+        return x
+
+    def body(x, layer_in):
+        lp, cache = layer_in
+        new_cache = {}
+        x = _stream(x)
+        for i, (mixer, ffn) in enumerate(pattern):
+            li = lp[f"l{i}"]
+            h = _apply_norm(li["norm1"], x, cfg)
+            if mixer == "attn":
+                y, new_cache[f"l{i}"] = attention.decode_attention(
+                    li["attn"], h, cache[f"l{i}"], cache_pos, cfg,
+                )
+                x = x + y
+            else:
+                y, new_cache[f"l{i}"] = ssm.ssd_decode(li["ssm"], h, cache[f"l{i}"], cfg)
+                x = x + y
+            if ffn != "none":
+                h2 = _apply_norm(li["norm2"], x, cfg)
+                if ffn == "moe":
+                    y2, _aux = moe.moe(li["moe"], h2, cfg)
+                else:
+                    y2 = mlp.mlp(li["mlp"], h2, cfg)
+                x = _stream(x + y2)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, new_caches
+
+
+# -- prefill -----------------------------------------------------------------
+
+def prefill(params: Dict, tokens: jnp.ndarray, cfg, *,
+            prefix_embeds: Optional[jnp.ndarray] = None):
+    """Run the full prompt and return (last-token logits, decode caches).
+
+    Implemented as forward + per-layer cache extraction in one scan so the
+    HLO stays flat. The caches are sized to the prompt length; serving code
+    re-pads them to the decode window.
+    """
+    x = embed_tokens(params, tokens, cfg)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    (pattern, repeats), = cfg.layer_groups()
+
+    def body(x, lp):
+        caches = {}
+        for i, (mixer, ffn) in enumerate(pattern):
+            li = lp[f"l{i}"]
+            h = _apply_norm(li["norm1"], x, cfg)
+            if mixer == "attn":
+                y, (k, v) = attention.self_attention(
+                    li["attn"], h, positions, cfg, causal=True,
+                    prefix_len=prefix_len,
+                )
+                caches[f"l{i}"] = {"k": k.astype(jnp.bfloat16),
+                                   "v": v.astype(jnp.bfloat16)}
+                x = x + y
+            else:
+                y, st = ssm.ssd_forward(li["ssm"], h, cfg, return_state=True)
+                caches[f"l{i}"] = st
+                x = x + y
+            if ffn != "none":
+                h2 = _apply_norm(li["norm2"], x, cfg)
+                y2 = (moe.moe(li["moe"], h2, cfg)[0] if ffn == "moe"
+                      else mlp.mlp(li["mlp"], h2, cfg))
+                x = x + y2
+        return x, caches
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x[:, -1:, :], cfg)
+    return logits, caches

@@ -1,0 +1,80 @@
+"""AdamW on explicit pytrees (no optax dependency).
+
+State dtypes are configurable per the model config: f32 master + f32 moments
+by default; Jamba-398B runs bf16 moments + bf16 master to fit HBM
+(DESIGN.md §6). Update math always runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_state", "apply_updates", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def init_state(params: Any, cfg: AdamWConfig) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, grads: Any, state: Dict, cfg: AdamWConfig,
+                  lr: Optional[jnp.ndarray] = None) -> Tuple[Any, Dict]:
+    """One AdamW step; returns (new params, new state). params keep their
+    (master) dtype; moments keep cfg.moment_dtype."""
+    step = state["step"] + 1
+    lr = cfg.lr if lr is None else lr
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = mf / c1
+        vhat = vf / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

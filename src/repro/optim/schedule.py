@@ -1,0 +1,20 @@
+"""LR schedules: linear warmup into cosine or constant decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_constant"]
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def warmup_constant(step, base_lr: float, warmup: int):
+    step = step.astype(jnp.float32)
+    return jnp.minimum(base_lr, base_lr * step / jnp.maximum(warmup, 1))

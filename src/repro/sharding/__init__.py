@@ -1,0 +1,7 @@
+"""Sharding: logical-axis rules, partition-spec builders, pipeline parallel."""
+from .rules import ShardingPlan, make_plan, param_shardings, spec_to_pspec  # noqa: F401
+from .partition import (  # noqa: F401
+    activation_ctx, batch_shardings, current_plan, decode_input_shardings,
+    maybe_constrain, params_only_shardings, train_state_shardings,
+)
+from .pipeline import bubble_fraction, pipeline_apply  # noqa: F401

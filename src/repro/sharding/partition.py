@@ -1,0 +1,156 @@
+"""Build the full in/out sharding trees for train / prefill / decode steps.
+
+The activation-sharding context lets model code place
+`with_sharding_constraint`s without threading mesh objects through every
+call: steps/launch set the context, `maybe_constrain` is a no-op otherwise.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .rules import ShardingPlan, param_shardings, spec_to_pspec
+from ..models import steps as steps_mod
+from ..models.common import Spec
+
+__all__ = [
+    "activation_ctx", "maybe_constrain", "train_state_shardings",
+    "batch_shardings", "decode_input_shardings", "params_only_shardings",
+]
+
+_ACT_PLAN: Optional[ShardingPlan] = None
+
+
+@contextmanager
+def activation_ctx(plan: Optional[ShardingPlan]):
+    global _ACT_PLAN
+    prev = _ACT_PLAN
+    _ACT_PLAN = plan
+    try:
+        yield
+    finally:
+        _ACT_PLAN = prev
+
+
+def current_plan() -> Optional[ShardingPlan]:
+    return _ACT_PLAN
+
+
+def maybe_constrain(x: jnp.ndarray, kind: str = "hidden") -> jnp.ndarray:
+    """Constrain an activation if a plan is active.
+
+    kind="hidden": (B, S, D) — batch axes on dim0, optional SP on dim1.
+    kind="tokens": (T, D)    — batch axes on dim0.
+    kind="chunks": (N, C, D) — batch axes on dim1 (loss-chunk layout).
+    """
+    plan = _ACT_PLAN
+    if plan is None:
+        return x
+    bsz = plan.axis_size(plan.batch_axes) if plan.batch_axes else 1
+
+    def bax(n):
+        return plan.batch_axes if (plan.batch_axes and n % bsz == 0 and n >= bsz) else None
+
+    if kind == "hidden" and x.ndim == 3:
+        b, s, _ = x.shape
+        sax = plan.seq_axis if (plan.seq_axis and s % plan.axis_size(plan.seq_axis) == 0) else None
+        spec = P(bax(b), sax, None)
+    elif kind == "tokens" and x.ndim >= 1:
+        spec = P(bax(x.shape[0]), *([None] * (x.ndim - 1)))
+    elif kind == "chunks" and x.ndim == 3:
+        spec = P(None, bax(x.shape[1]), None)
+    elif kind == "moe_buf" and x.ndim == 4:
+        # (B, E, C, D): batch on data axes, experts on the EP axis
+        eax = plan.rules.get("experts")
+        if eax is not None and x.shape[1] % plan.axis_size(eax) != 0:
+            eax = None
+        spec = P(bax(x.shape[0]), eax, None, None)
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))
+
+
+def train_state_shardings(cfg, plan: ShardingPlan) -> Dict:
+    specs = steps_mod.model_param_specs(cfg)
+    p_sh = param_shardings(specs, plan)
+    scalar = NamedSharding(plan.mesh, P())
+    return {
+        "params": p_sh,
+        "opt": {
+            "m": p_sh,
+            "v": p_sh,
+            "step": scalar,
+        },
+    }
+
+
+def params_only_shardings(cfg, plan: ShardingPlan) -> Any:
+    return param_shardings(steps_mod.model_param_specs(cfg), plan)
+
+
+def batch_shardings(cfg, plan: ShardingPlan, batch_tree: Any) -> Any:
+    """Shardings for a train/prefill input batch pytree (by array rank)."""
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        b = leaf.shape[0] if nd else 1
+        bsz = plan.axis_size(plan.batch_axes) if plan.batch_axes else 1
+        first = plan.batch_axes if (nd and plan.batch_axes and b % bsz == 0 and b >= bsz) else None
+        return NamedSharding(plan.mesh, P(first, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def decode_input_shardings(cfg, plan: ShardingPlan, inputs: Any) -> Any:
+    """Shardings for {token, caches, cache_pos} (path-aware).
+
+    Attention KV caches (path ends .../k or .../v; (L, B, S, KV, hd)) shard
+    batch + either the KV-head dim (head TP) or the sequence dim (SP
+    fallback / long_500k). SSM states (.../ssm: (L, B, H, P, N)) shard batch
+    + heads; conv tails (.../conv) shard batch only.
+    """
+    mesh = plan.mesh
+    bsz = plan.axis_size(plan.batch_axes) if plan.batch_axes else 1
+
+    def batch_ax(b):
+        return plan.batch_axes if (plan.batch_axes and b % bsz == 0 and b >= bsz) else None
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        last = keys[-1] if keys else ""
+        if last in ("k", "v", "k_scale", "v_scale"):  # (L, B, S, KV, hd|1)
+            _, b, s, kv, _ = leaf.shape
+            bax = batch_ax(b)
+            kvr = plan.rules.get("kv_heads")
+            if kvr and kv % plan.axis_size(kvr) == 0:
+                return NamedSharding(mesh, P(None, bax, None, kvr, None))
+            cax = plan.cache_seq_axis
+            if cax and s % plan.axis_size(cax) == 0:
+                if bax is None and s % (bsz * plan.axis_size(cax)) == 0:
+                    # long_500k: batch=1 — spread the cache over everything
+                    allax = (plan.batch_axes or ()) + (cax,)
+                    return NamedSharding(mesh, P(None, None, allax, None, None))
+                return NamedSharding(mesh, P(None, bax, cax, None, None))
+            return NamedSharding(mesh, P(None, bax, None, None, None))
+        if last == "ssm":                          # (L, B, H, P, N)
+            _, b, h = leaf.shape[:3]
+            bax = batch_ax(b)
+            hax = plan.rules.get("ssm_heads")
+            if hax and h % plan.axis_size(hax) == 0:
+                return NamedSharding(mesh, P(None, bax, hax, None, None))
+            return NamedSharding(mesh, P(None, bax, None, None, None))
+        if last == "conv":                         # (L, B, K-1, C)
+            b = leaf.shape[1]
+            return NamedSharding(mesh, P(None, batch_ax(b), None, None))
+        if last == "token":                        # (B, 1)
+            return NamedSharding(mesh, P(batch_ax(leaf.shape[0]), None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, inputs)

@@ -1,0 +1,119 @@
+"""Analysis layer: spectral bounds, path diversity, workloads, collectives."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T, workload as W
+from repro.core.analysis import analyze, fiedler_value, spectral_bounds
+from repro.core.collectives import (
+    AxisLink, HardwareModel, PhysicalFabric, collective_time,
+    hierarchical_all_reduce_time, plan_mesh_mapping,
+)
+
+
+def test_fiedler_complete_graph():
+    # K_n has Laplacian eigenvalues {0, n, ..., n}
+    n = 16
+    edges = np.array([(i, j) for i in range(n) for j in range(i + 1, n)])
+    from repro.core.graph import Graph
+
+    g = Graph(n=n, edges=edges)
+    lam2 = fiedler_value(g, iters=500)
+    assert abs(lam2 - n) < 0.1
+
+
+def test_fiedler_ring():
+    # C_n: lambda_2 = 2 - 2 cos(2 pi / n)
+    n = 32
+    edges = np.array([(i, (i + 1) % n) for i in range(n)])
+    from repro.core.graph import Graph
+
+    g = Graph(n=n, edges=edges)
+    lam2 = fiedler_value(g, iters=2000)
+    want = 2 - 2 * np.cos(2 * np.pi / n)
+    assert abs(lam2 - want) < 0.01
+
+
+def test_spectral_bisection_bound_sane():
+    g = T.make("slimfly", q=13)
+    rep = spectral_bounds(g)
+    assert 0 < rep["bisection_lower_bound"] <= rep["full_bisection_edges"]
+    assert rep["diameter_upper_bound"] >= 2
+
+
+def test_expander_beats_torus_on_fiedler():
+    xp = T.make("xpander", r=6, lifts=3)          # 56 routers, 6-regular
+    tr = T.make("torus", dims=(8, 7))             # 56 routers, 4-regular
+    # normalize by degree: expanders have a larger spectral gap
+    assert fiedler_value(xp) / 6 > 1.2 * fiedler_value(tr) / 4
+
+
+def test_workload_permutation_routes_shortest():
+    g = T.make("slimfly", q=5)
+    wl = W.make_traffic(g, "permutation", flows=256, seed=1)
+    rep = W.evaluate_workload(g, wl)
+    assert rep["avg_hops"] <= 2.0 + 1e-9  # diameter-2 network
+    assert rep["max_link_load"] >= rep["mean_link_load"]
+
+
+@pytest.mark.parametrize("pattern", ["permutation", "uniform", "skewed"])
+def test_workload_patterns_run(pattern):
+    g = T.make("hyperx", dims=(4, 4))
+    wl = W.make_traffic(g, pattern, flows=128)
+    rep = W.evaluate_workload(g, wl)
+    assert rep["flows"] > 0 and rep["links_used"] > 0
+
+
+def test_skewed_more_imbalanced_than_uniform():
+    g = T.make("jellyfish", n=128, r=8, seed=0)
+    u = W.evaluate_workload(g, W.make_traffic(g, "uniform", flows=4096, seed=2))
+    s = W.evaluate_workload(g, W.make_traffic(g, "skewed", flows=4096, seed=2))
+    assert s["load_imbalance"] > u["load_imbalance"]
+
+
+# -- collective cost model ----------------------------------------------------
+
+def test_collective_time_monotone_in_bytes():
+    ax = AxisLink("model", 16, "ici_ring")
+    t1 = collective_time("all-reduce", 1e6, ax)
+    t2 = collective_time("all-reduce", 2e6, ax)
+    assert t2 > t1
+
+
+def test_allreduce_is_2x_allgather():
+    ax = AxisLink("model", 16, "ici_ring")
+    hw = HardwareModel(ici_latency=0.0)
+    ar = collective_time("all-reduce", 1e6, ax, hw)
+    ag = collective_time("all-gather", 1e6, ax, hw)
+    assert abs(ar / ag - 2.0) < 1e-9
+
+
+def test_dcn_slower_than_ici():
+    hw = HardwareModel()
+    ici = collective_time("all-reduce", 1e8, AxisLink("data", 16, "ici_ring"), hw)
+    dcn = collective_time("all-reduce", 1e8, AxisLink("pod", 2, "dcn"), hw)
+    # per-byte DCN is ~16x slower even though the pod axis is tiny
+    assert dcn > ici
+
+
+def test_hierarchical_allreduce_cheaper_than_flat_dcn():
+    hw = HardwareModel()
+    axes = {"pod": AxisLink("pod", 2, "dcn"), "data": AxisLink("data", 16, "ici_ring")}
+    hier = hierarchical_all_reduce_time(1e8, axes, hw)
+    flat = collective_time("all-reduce", 1e8, AxisLink("pod", 32, "dcn"), hw)
+    assert hier < flat
+
+
+def test_plan_mesh_mapping_single_and_multi():
+    plan = plan_mesh_mapping({"data": 16, "model": 16}, PhysicalFabric((16, 16), 1))
+    used = [d for dims in plan.assignment.values() for d in dims]
+    assert sorted(used) == [0, 1]  # both torus dims assigned, disjointly
+    plan2 = plan_mesh_mapping({"pod": 2, "data": 16, "model": 16},
+                              PhysicalFabric((16, 16), 2))
+    assert plan2.axis_links["pod"].kind == "dcn"
+
+
+def test_plan_mesh_mapping_folded_axis():
+    # mesh (data=4, model=64) on a 16x16 torus requires folding model over
+    # both torus dims — no single dim has 64 chips
+    with pytest.raises(ValueError):
+        plan_mesh_mapping({"data": 4, "model": 999}, PhysicalFabric((16, 16), 1))

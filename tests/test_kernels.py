@@ -1,0 +1,78 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(128, 128, 128), (256, 128, 384), (100, 200, 60), (33, 17, 129)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_minplus_matches_ref(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    a = jax.random.uniform(ka, (m, k), dtype) * 10
+    b = jax.random.uniform(kb, (k, n), dtype) * 10
+    out = ops.minplus_matmul(a, b)
+    want = ref.minplus_matmul_ref(a, b)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_minplus_with_inf_distances():
+    inf = jnp.inf
+    a = jnp.array([[0.0, 1.0, inf], [1.0, 0.0, inf], [inf, inf, 0.0]])
+    out = ops.minplus_matmul(a, a)
+    want = ref.minplus_matmul_ref(a, a)
+    np.testing.assert_allclose(out, want)
+    assert out[0, 2] == inf  # still disconnected after one squaring
+
+
+def test_minplus_apsp_squaring_converges():
+    # path graph 0-1-2-3: distances must converge to |i-j|
+    n = 8
+    d = jnp.full((n, n), jnp.inf).at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    for i in range(n - 1):
+        d = d.at[i, i + 1].set(1.0).at[i + 1, i].set(1.0)
+    for _ in range(4):
+        d = ops.minplus_matmul(d, d)
+    ii, jj = jnp.meshgrid(jnp.arange(n), jnp.arange(n), indexing="ij")
+    np.testing.assert_allclose(d, jnp.abs(ii - jj).astype(jnp.float32))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_reachability_matches_ref(m, k, n):
+    key = jax.random.PRNGKey(m + n)
+    a = (jax.random.uniform(key, (m, k)) > 0.9).astype(jnp.float32)
+    b = (jax.random.uniform(jax.random.fold_in(key, 1), (k, n)) > 0.9).astype(jnp.float32)
+    out = ops.reachability_step(a, b)
+    want = ref.reachability_step_ref(a, b)
+    np.testing.assert_allclose(out, want)
+
+
+@pytest.mark.parametrize("shape", [(256, 256), (100, 300), (512, 64)])
+@pytest.mark.parametrize("bins", [8, 33, 64])
+def test_histogram_matches_ref(shape, bins):
+    key = jax.random.PRNGKey(shape[0] + bins)
+    vals = jnp.floor(jax.random.uniform(key, shape) * (bins + 4)) - 2.0
+    vals = jnp.where(jax.random.uniform(jax.random.fold_in(key, 1), shape) > 0.9,
+                     jnp.inf, vals)
+    out = ops.value_histogram(vals, bins)
+    want = ref.value_histogram_ref(vals, bins)
+    np.testing.assert_allclose(out, want)
+
+
+def test_histogram_counts_everything_in_range():
+    x = jnp.broadcast_to(jnp.arange(16.0), (16, 16))
+    out = ops.value_histogram(x, 16)
+    np.testing.assert_allclose(out, np.full(16, 16))
+
+
+@pytest.mark.parametrize("blocks", [(64, 64, 64), (128, 256, 128)])
+def test_minplus_block_shape_sweep(blocks):
+    bm, bn, bk = blocks
+    a = jax.random.uniform(jax.random.PRNGKey(0), (256, 256)) * 5
+    b = jax.random.uniform(jax.random.PRNGKey(1), (256, 256)) * 5
+    out = ops.minplus_matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, ref.minplus_matmul_ref(a, b), rtol=1e-6)

@@ -1,0 +1,168 @@
+"""Model-layer unit tests: flash attention, SSD, MoE, decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe as moe_mod, ssm, steps, transformer
+from repro.models.attention import chunked_attention
+from repro.models.flash import flash_attention
+
+
+@pytest.mark.parametrize("causal,prefix", [(True, 0), (True, 13), (False, 0)])
+@pytest.mark.parametrize("sq,skv", [(64, 64), (100, 100), (37, 129)])
+def test_flash_matches_chunked_oracle(causal, prefix, sq, skv):
+    if causal and sq != skv:
+        pytest.skip("causal self-attn uses square shapes here")
+    B, KV, G, D = 2, 2, 3, 16
+    key = jax.random.PRNGKey(sq + skv)
+    q = jax.random.normal(key, (B, sq, KV, G, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, skv, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, skv, KV, D))
+    o1 = flash_attention(q, k, v, causal, prefix, 32, 32, 0)
+    o2 = chunked_attention(q.reshape(B, sq, KV * G, D), k, v,
+                           jnp.arange(sq), jnp.arange(skv),
+                           causal=causal, prefix_len=prefix,
+                           q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(o1.reshape(o2.shape), o2, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_grads_match_oracle():
+    B, S, KV, G, D = 2, 96, 2, 2, 8
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, KV, G, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+
+    def f_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(q, k, v, True, 0, 32, 32, 0)))
+
+    def f_ref(q, k, v):
+        o = chunked_attention(q.reshape(B, S, KV * G, D), k, v,
+                              jnp.arange(S), jnp.arange(S), causal=True,
+                              q_chunk=32, kv_chunk=32)
+        return jnp.sum(jnp.sin(o.reshape(B, S, KV, G, D)))
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def _ssd_naive(p, u, cfg):
+    """O(S^2) reference: run the recurrence token by token."""
+    import numpy as np
+
+    b, s, _ = u.shape
+    outs = []
+    state = ssm.init_decode_state(cfg, b)
+    # replicate conv semantics by feeding tokens one at a time
+    for t in range(s):
+        y, state = ssm.ssd_decode(p, u[:, t:t + 1], state, cfg)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+def test_ssd_chunked_matches_stepwise():
+    cfg = get_config("mamba2-370m").reduced(n_layers=1)
+    from repro.models.common import init_params
+
+    p = init_params(jax.random.PRNGKey(0), ssm.param_specs(cfg), jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.3
+    y_chunk = ssm.ssd_forward(p, u, cfg)
+    y_step = _ssd_naive(p, u, cfg)
+    np.testing.assert_allclose(y_chunk, y_step, rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_prefill_state_continues_decode():
+    """State returned by prefill must equal state after stepwise decode."""
+    cfg = get_config("mamba2-370m").reduced(n_layers=1)
+    from repro.models.common import init_params
+
+    p = init_params(jax.random.PRNGKey(0), ssm.param_specs(cfg), jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model)) * 0.3
+    _, st_prefill = ssm.ssd_forward(p, u, cfg, return_state=True)
+    st = ssm.init_decode_state(cfg, 1)
+    for t in range(32):
+        _, st = ssm.ssd_decode(p, u[:, t:t + 1], st, cfg)
+    np.testing.assert_allclose(st_prefill["ssm"], st["ssm"], rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(
+        np.asarray(st_prefill["conv"], np.float32),
+        np.asarray(st["conv"], np.float32), rtol=5e-3, atol=5e-3)
+
+
+def test_moe_routes_top_k_and_balances():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    from repro.models.common import init_params
+
+    p = init_params(jax.random.PRNGKey(0), moe_mod.param_specs(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    out, aux = moe_mod.moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    # Switch aux loss is ~1 for balanced routing, larger when imbalanced
+    assert 0.5 < float(aux) < float(cfg.n_experts)
+
+
+def test_moe_capacity_drops_dont_nan():
+    cfg = get_config("granite-moe-1b-a400m").reduced(capacity_factor=0.1)
+    from repro.models.common import init_params
+
+    p = init_params(jax.random.PRNGKey(0), moe_mod.param_specs(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    out, _ = moe_mod.moe(p, x, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_decode_matches_prefill_logits():
+    """Teacher-forced decode over a prompt must reproduce prefill logits."""
+    cfg = get_config("phi3-mini-3.8b").reduced(n_layers=2)
+    state = steps.init_train_state(cfg, jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), state["params"])
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    # full forward logits at last position
+    hidden, _ = transformer.forward(params, toks, cfg)
+    full_logits = transformer.logits_from_hidden(params, hidden, cfg)
+
+    caches = transformer.init_decode_caches(cfg, B, 32, dtype=jnp.float32)
+    logits = None
+    for t in range(S):
+        logits, caches = transformer.decode_step(
+            params, toks[:, t:t + 1], caches, jnp.int32(t), cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full_logits[:, -1]),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_lm_loss_matches_unchunked():
+    cfg = get_config("phi3-mini-3.8b").reduced(n_layers=1, loss_chunk=64)
+    state = steps.init_train_state(cfg, jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), state["params"])
+    B, S = 2, 48
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    hidden, _ = transformer.forward(params, toks, cfg)
+    _, nll = transformer.lm_loss(params, hidden, labels, cfg)
+    # reference: full softmax xent
+    logits = transformer.logits_from_hidden(params, hidden, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    want = jnp.mean(lse - ll)
+    np.testing.assert_allclose(float(nll), float(want), rtol=1e-5)
+
+
+def test_labels_ignore_index():
+    cfg = get_config("phi3-mini-3.8b").reduced(n_layers=1)
+    state = steps.init_train_state(cfg, jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), state["params"])
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab_size)
+    hidden, _ = transformer.forward(params, toks, cfg)
+    _, nll_all = transformer.lm_loss(params, hidden, labels, cfg)
+    half = labels.at[:, 16:].set(-1)
+    _, nll_half = transformer.lm_loss(params, hidden, half, cfg)
+    assert not np.isclose(float(nll_all), float(nll_half))
+    assert np.isfinite(float(nll_half))

@@ -1,0 +1,128 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology as T
+from repro.core.collectives import AxisLink, HardwareModel, collective_time
+from repro.kernels import ops, ref
+
+
+# -- tropical semiring properties --------------------------------------------
+
+@st.composite
+def _square_mats(draw, max_n=24):
+    n = draw(st.integers(2, max_n))
+    elems = st.floats(0.0, 100.0, allow_nan=False, width=32)
+    a = draw(st.lists(st.lists(elems, min_size=n, max_size=n),
+                      min_size=n, max_size=n))
+    return jnp.array(a, jnp.float32)
+
+
+@given(_square_mats())
+@settings(max_examples=25, deadline=None)
+def test_minplus_associative(a):
+    # (A (x) A) (x) A == A (x) (A (x) A) over the tropical semiring
+    ab_c = ref.minplus_matmul_ref(ref.minplus_matmul_ref(a, a), a)
+    a_bc = ref.minplus_matmul_ref(a, ref.minplus_matmul_ref(a, a))
+    np.testing.assert_allclose(ab_c, a_bc, rtol=1e-5)
+
+
+@given(_square_mats(max_n=16))
+@settings(max_examples=20, deadline=None)
+def test_minplus_kernel_equals_oracle_property(a):
+    np.testing.assert_allclose(
+        ops.minplus_matmul(a, a), ref.minplus_matmul_ref(a, a), rtol=1e-6)
+
+
+@given(st.integers(2, 40), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_distance_matrix_invariants(n, seed):
+    """APSP output: zero diagonal, symmetry, triangle inequality."""
+    rng = np.random.default_rng(seed)
+    # random connected graph: random tree + extra edges
+    edges = [(i, int(rng.integers(0, i))) for i in range(1, n)]
+    extra = rng.integers(0, n, size=(n, 2))
+    edges += [tuple(e) for e in extra if e[0] != e[1]]
+    from repro.core.graph import Graph
+    from repro.core.analysis import apsp_dense
+
+    g = Graph(n=n, edges=np.array(edges))
+    d = apsp_dense(g, use_kernel=False)
+    assert (np.diag(d) == 0).all()
+    np.testing.assert_allclose(d, d.T, rtol=1e-6)
+    # triangle inequality on a sample
+    for _ in range(20):
+        i, j, k = rng.integers(0, n, 3)
+        assert d[i, j] <= d[i, k] + d[k, j] + 1e-4
+
+
+@given(st.sampled_from([5, 13, 17]), st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_slimfly_regularity_property(q, _):
+    g = T.make("slimfly", q=q)
+    assert (g.degrees() == (3 * q - 1) // 2).all()
+
+
+@given(st.integers(2, 6), st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_torus_edge_count(a, b):
+    g = T.make("torus", dims=(a, b))
+    expect = 0
+    for size, other in ((a, b), (b, a)):
+        if size == 2:
+            expect += other  # rings of length 2 collapse to single edges
+        else:
+            expect += size * other
+    assert g.num_edges == expect
+
+
+# -- histogram conservation ----------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(4, 64))
+@settings(max_examples=15, deadline=None)
+def test_histogram_total_conservation(seed, bins):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, bins, size=(64, 64)).astype(np.float32)
+    out = np.asarray(ops.value_histogram(jnp.array(x), bins))
+    assert out.sum() == x.size
+
+
+# -- collective cost model properties ------------------------------------------
+
+@given(st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all"]),
+       st.integers(2, 512), st.floats(1e3, 1e12))
+@settings(max_examples=40, deadline=None)
+def test_collective_cost_positive_and_bounded(kind, n, nbytes):
+    ax = AxisLink("x", n, "ici_ring")
+    t = collective_time(kind, nbytes, ax)
+    assert t > 0
+    # wire bytes never exceed 2x payload (all-reduce worst case)
+    hw = HardwareModel()
+    assert t <= 2 * nbytes / ax.bandwidth(hw) + n * hw.ici_latency + 1e-9
+
+
+@given(st.integers(2, 64), st.floats(1e3, 1e9))
+@settings(max_examples=20, deadline=None)
+def test_allreduce_cost_increases_with_axis_latency_bound(n, nbytes):
+    t_small = collective_time("all-reduce", nbytes, AxisLink("x", n, "ici_ring"))
+    t_big = collective_time("all-reduce", nbytes, AxisLink("x", 2 * n, "ici_ring"))
+    assert t_big >= t_small * 0.99  # (n-1)/n growth + latency
+
+
+# -- data pipeline property ----------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_seek_equals_iterate(step, shards):
+    from repro.data import DataConfig, SyntheticLM
+
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4)
+    src = SyntheticLM(cfg)
+    a = src.batch_at(step, shard=0, n_shards=shards)
+    b = src.batch_at(step, shard=0, n_shards=shards)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < 512 and a["tokens"].min() >= 0

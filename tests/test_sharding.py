@@ -1,0 +1,126 @@
+"""Sharding plan + roofline parsing tests (no multi-device needed)."""
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.analytic import analytic_cost
+from repro.launch.roofline import (
+    CollectiveOp, collective_seconds, model_flops, parse_collectives,
+    roofline_report,
+)
+from repro.models.common import Spec
+from repro.sharding.rules import ShardingPlan, make_plan, spec_to_pspec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _plan(cfg, shape=None):
+    mesh = _FakeMesh(shape or {"data": 16, "model": 16})
+    return make_plan(cfg, mesh)
+
+
+def test_plan_phi3_full_tp():
+    plan = _plan(get_config("phi3-mini-3.8b"))
+    assert plan.rules["heads"] == "model"
+    assert plan.rules["mlp"] == "model"
+    assert plan.rules["vocab"] == "model"
+    assert plan.rules["embed"] == "data"   # FSDP
+
+
+def test_plan_yi_heads_fallback():
+    plan = _plan(get_config("yi-34b"))
+    assert plan.rules["heads"] is None     # 56 % 16 != 0
+    assert plan.seq_axis == "model"        # SP instead
+    assert any("heads" in n for n in plan.notes)
+
+
+def test_plan_granite40_experts_fallback():
+    plan = _plan(get_config("granite-moe-3b-a800m"))
+    assert plan.rules["experts"] is None   # 40 % 16 != 0
+    assert any("experts" in n for n in plan.notes)
+
+
+def test_plan_multipod_batch_axes():
+    plan = _plan(get_config("gemma-2b"), {"pod": 2, "data": 16, "model": 16})
+    assert plan.batch_axes == ("pod", "data")
+
+
+def test_spec_to_pspec_conflict_resolution():
+    plan = _plan(get_config("granite-moe-1b-a400m"))
+    # experts and mlp both want "model": experts (dim 0) wins, mlp dropped
+    s = Spec((32, 1024, 512), ("experts", "embed", "mlp"))
+    assert spec_to_pspec(s, plan) == P("model", "data", None)
+
+
+def test_spec_to_pspec_divisibility():
+    plan = _plan(get_config("phi3-mini-3.8b"))
+    s = Spec((100, 3072), ("vocab", "embed"))   # 100 % 16 != 0
+    assert spec_to_pspec(s, plan) == P(None, "data")
+
+
+# -- HLO collective parsing ----------------------------------------------------
+
+HLO_SNIPPET = """
+  %all-gather.1 = f32[8,4096,3072]{2,1,0} all-gather(%x), channel_id=1, replica_groups=[32,16]<=[512], dimensions={2}, use_global_device_ids=true
+  %all-reduce.2 = bf16[1024,512]{1,0} all-reduce(%y), replica_groups=[16,32]<=[32,16]T(1,0), to_apply=%add
+  %collective-permute.3 = f32[128]{0} collective-permute(%z), source_target_pairs={{0,1},{1,2}}
+"""
+
+
+def test_parse_collectives_shapes_and_axes():
+    mesh = {"pod": 2, "data": 16, "model": 16}
+    ops = parse_collectives(HLO_SNIPPET, mesh)
+    assert len(ops) == 3
+    ag = ops[0]
+    assert ag.kind == "all-gather" and ag.group_size == 16
+    assert ag.axes == ("model",)          # contiguous groups of 16
+    assert ag.result_bytes == 8 * 4096 * 3072 * 4
+    ar = ops[1]
+    assert ar.kind == "all-reduce" and ar.group_size == 32
+    assert set(ar.axes) == {"pod", "data"}  # strided groups across pod+data
+    cp = ops[2]
+    assert cp.kind == "collective-permute" and cp.wire_bytes == 128 * 4
+
+
+def test_collective_seconds_topology_vs_flat():
+    mesh = {"data": 16, "model": 16}
+    ops = [CollectiveOp("all-reduce", 10 ** 9, 16, ("model",), 2e9 * 15 / 16)]
+    flat, topo, by_axis = collective_seconds(ops, mesh)
+    assert flat > 0 and topo > 0
+    assert "model" in by_axis
+    # topology model: bidirectional ring = 2x the flat single-link bandwidth
+    assert topo < flat
+
+
+def test_roofline_report_dominant_term():
+    rep = roofline_report(
+        flops=1e18, hlo_bytes=1e12,
+        ops=[CollectiveOp("all-gather", 1e6, 16, ("model",), 1e6)],
+        mesh_shape={"data": 16, "model": 16},
+        mflops=0.6e18)
+    assert rep["dominant"] == "compute"
+    assert 0.5 < rep["useful_flops_ratio"] < 0.7
+    assert rep["mfu_bound"] <= 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_analytic_cost_positive_all_cells(arch):
+    from repro.configs.base import SHAPES
+    from repro.configs.specs import cell_is_applicable
+
+    cfg = get_config(arch)
+    for name, sh in SHAPES.items():
+        if not cell_is_applicable(cfg, name)[0]:
+            continue
+        c = analytic_cost(cfg, sh, 256)
+        assert c.flops > 0 and c.hbm_bytes > 0, (arch, name)
+        mf = model_flops(cfg, sh)
+        assert mf > 0
+        if sh.kind == "train":
+            # useful flops can't exceed executed flops
+            assert mf <= c.flops * 1.05, (arch, name, mf / c.flops)

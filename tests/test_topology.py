@@ -1,0 +1,101 @@
+"""Topology invariants: closed-form degrees/diameters, connectivity, sizing."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.analysis import analyze, apsp_dense
+
+
+def test_torus_structure():
+    g = T.make("torus", dims=(4, 6))
+    assert g.n == 24
+    d = g.degrees()
+    assert (d == 4).all()
+    rep = analyze(g, spectral=False, use_kernel=False)
+    assert rep["diameter"] == 2 + 3  # sum of floor(L/2)
+
+
+def test_torus_3d():
+    g = T.make("torus", dims=(3, 3, 3))
+    assert (g.degrees() == 6).all()
+    assert analyze(g, spectral=False, use_kernel=False)["diameter"] == 3
+
+
+def test_hypercube_diameter_equals_dim():
+    for dim in (3, 5, 7):
+        g = T.make("hypercube", dim=dim)
+        assert g.n == 2 ** dim
+        assert (g.degrees() == dim).all()
+        rep = analyze(g, spectral=False, use_kernel=False)
+        assert rep["diameter"] == dim
+
+
+@pytest.mark.parametrize("q", [5, 13, 17, 29])
+def test_slimfly_mms_invariants(q):
+    g = T.make("slimfly", q=q)
+    assert g.n == 2 * q * q
+    k = (3 * q - 1) // 2
+    assert (g.degrees() == k).all(), "MMS graph must be k-regular"
+    rep = analyze(g, spectral=False)
+    assert rep["diameter"] == 2
+
+
+def test_hyperx_hamming():
+    g = T.make("hyperx", dims=(4, 5))
+    assert g.n == 20
+    assert (g.degrees() == (3 + 4)).all()
+    assert analyze(g, spectral=False, use_kernel=False)["diameter"] == 2
+
+
+def test_dragonfly_balanced():
+    h = 3
+    g = T.make("dragonfly", h=h)
+    a, grp = 2 * h, 2 * h * h + 1
+    assert g.n == a * grp
+    assert (g.degrees() == (a - 1 + h)).all()
+    rep = analyze(g, spectral=False, use_kernel=False)
+    assert rep["diameter"] == 3
+
+
+def test_jellyfish_regular_connected():
+    g = T.make("jellyfish", n=128, r=7, seed=3)
+    assert (g.degrees() == 7).all()
+    assert g.is_connected()
+
+
+def test_jellyfish_deterministic_by_seed():
+    g1 = T.make("jellyfish", n=64, r=6, seed=5)
+    g2 = T.make("jellyfish", n=64, r=6, seed=5)
+    assert np.array_equal(g1.edges, g2.edges)
+
+
+def test_xpander_lift_preserves_degree():
+    g = T.make("xpander", r=8, lifts=4)
+    assert g.n == 9 * 16
+    assert (g.degrees() == 8).all()
+    assert g.is_connected()
+
+
+def test_fattree_structure():
+    k = 4
+    g = T.make("fattree", k=k)
+    assert g.n == (k // 2) ** 2 + k * k  # core + agg + edge
+    rep = analyze(g, spectral=False, use_kernel=False)
+    assert rep["diameter"] == 4
+    assert g.num_servers == k ** 3 // 4
+
+
+def test_by_servers_sizing_within_2x():
+    for fam in T.families():
+        g = T.by_servers(fam, 10_000)
+        assert 3_000 <= g.num_servers <= 40_000, (fam, g.num_servers)
+
+
+def test_apsp_kernel_vs_bfs_oracle():
+    g = T.make("slimfly", q=5)
+    dist = apsp_dense(g, use_kernel=True)
+    from repro.core.analysis import bfs_distances
+
+    src = np.arange(g.n)
+    bfs = bfs_distances(g, src)
+    np.testing.assert_allclose(dist, bfs.astype(np.float32))
