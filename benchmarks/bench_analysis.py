@@ -1,17 +1,21 @@
 """Benchmark 2 (Table-2 analogue): analysis cost per topology metric.
 
-Times each analysis stage — APSP (min-plus kernel), spectral bounds, path
-diversity, histogram — on matched ~10k-server instances of every family, and
-on sampled-BFS mode for a ~1M-server instance.
+Times each `AnalysisEngine` stage — APSP (min-plus kernel), shortest-path
+multiplicities + slack counts (counting kernel), spectral bounds, path
+diversity, histogram — on matched ~10k-server instances of every family,
+sharing one APSP result across stages, and on sampled-BFS mode for a
+~1M-server instance.
 """
 from __future__ import annotations
 
 import time
 from typing import List
 
+import numpy as np
+
 from repro.core import topology as T
 from repro.core.analysis import (
-    analyze, apsp_dense, path_diversity, sampled_distances, spectral_bounds,
+    AnalysisEngine, path_diversity, sampled_distances, spectral_bounds,
 )
 
 
@@ -22,24 +26,33 @@ def run(quick: bool = False) -> List[dict]:
         fams = fams[:3]
     for fam in fams:
         g = T.by_servers(fam, 10_000)
+        eng = AnalysisEngine(g)
         t0 = time.time()
-        dist = apsp_dense(g)
+        dist = eng.distances()
         t_apsp = time.time() - t0
+        t0 = time.time()
+        paths = eng.multiplicities()  # reuses the engine's APSP result
+        t_mult = time.time() - t0
         t0 = time.time()
         spec = spectral_bounds(g, iters=150)
         t_spec = time.time() - t0
         t0 = time.time()
         div = path_diversity(g, dist, pairs=256)
         t_div = time.time() - t0
+        off = np.isfinite(dist) & (dist > 0)
         rows.append({
             "family": fam, "routers": g.n, "servers": g.num_servers,
-            "apsp_s": round(t_apsp, 2), "spectral_s": round(t_spec, 2),
-            "diversity_s": round(t_div, 2),
+            "apsp_s": round(t_apsp, 2), "mult_s": round(t_mult, 2),
+            "spectral_s": round(t_spec, 2), "diversity_s": round(t_div, 2),
             "diameter": int(dist[dist < 1e9].max()),
             "avg_path": round(float(dist[dist < 1e9].sum() / max(1, g.n * (g.n - 1))), 3),
             "fiedler": round(spec["fiedler_lambda2"], 2),
             "bisection_lb": int(spec["bisection_lower_bound"]),
             "diversity_mean": round(float(div.mean()), 2),
+            "mult_mean": round(float(paths["multiplicity"][off].mean()), 2),
+            "plus1_mean": round(float(paths["plus1"][off].mean()), 2),
+            "plus2_mean": round(float(paths["plus2"][off].mean()), 2),
+            "counts_exact": bool(paths["exact"]),
         })
     # million-server sampled mode
     if not quick:
@@ -50,10 +63,12 @@ def run(quick: bool = False) -> List[dict]:
         rows.append({
             "family": "jellyfish-1M (sampled)", "routers": g.n,
             "servers": g.num_servers, "apsp_s": round(t_bfs, 2),
-            "spectral_s": None, "diversity_s": None,
+            "mult_s": None, "spectral_s": None, "diversity_s": None,
             "diameter": int(d.max()),
             "avg_path": round(float(d[d > 0].mean()), 3),
             "fiedler": None, "bisection_lb": None, "diversity_mean": None,
+            "mult_mean": None, "plus1_mean": None, "plus2_mean": None,
+            "counts_exact": None,
         })
     return rows
 

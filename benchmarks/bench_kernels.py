@@ -43,6 +43,30 @@ def run(quick: bool = False) -> List[dict]:
                 "kernel_s": round(t_k, 3), "oracle_s": round(t_r, 3),
                 "match": ok,
             })
+    # counting semiring (MXU path of the generic kernel)
+    n = 256 if quick else 512
+    c = jnp.floor(jax.random.uniform(key, (n, n)) * 3)
+    t0 = time.time()
+    out = ops.count_matmul(c, c).block_until_ready()
+    rows.append({"kernel": "counting", "n": n, "block": (128, 128, 128),
+                 "vmem_kb": _vmem_bytes(128, 128, 128) // 1024,
+                 "kernel_s": round(time.time() - t0, 3), "oracle_s": None,
+                 "match": bool(jnp.allclose(out, ref.count_matmul_ref(c, c)))})
+    # fused tropical-with-count pairs (VPU path, 2 fields)
+    dmat = jnp.floor(jax.random.uniform(key, (n, n)) * 6) + 1
+    cmat = jnp.floor(jax.random.uniform(jax.random.fold_in(key, 2), (n, n)) * 4)
+    t0 = time.time()
+    d, cnt = ops.minplus_count_matmul(dmat, cmat, dmat, cmat)
+    d.block_until_ready()
+    cnt.block_until_ready()
+    t_k = time.time() - t0
+    t0 = time.time()
+    dr, cr = ref.minplus_count_matmul_ref(dmat, cmat, dmat, cmat)
+    cr.block_until_ready()
+    rows.append({"kernel": "tropical_count", "n": n, "block": (128, 128, 128),
+                 "vmem_kb": 2 * _vmem_bytes(128, 128, 128) // 1024,
+                 "kernel_s": round(t_k, 3), "oracle_s": round(time.time() - t0, 3),
+                 "match": bool(jnp.allclose(d, dr) and jnp.allclose(cnt, cr))})
     a = (jax.random.uniform(key, (512, 512)) > 0.95).astype(jnp.float32)
     t0 = time.time()
     out = ops.reachability_step(a, a).block_until_ready()

@@ -1,30 +1,42 @@
 """EvalNet end-to-end: generate -> analyze -> route traffic -> pick mesh map.
 
 Compares the assigned low-diameter families at a matched ~10k-server cost
-point (the Fig-1-style comparison) and prints the collective-planner view of
-the production TPU fabric.
+point (the Fig-1-style comparison) — including the paper's path-diversity
+columns: exact shortest-path multiplicity and non-minimal path counts at
++1/+2 length slack — and prints the collective-planner view of the
+production TPU fabric.
 
   PYTHONPATH=src python examples/topology_analysis.py
 """
 from repro.core import topology as T, workload as W
-from repro.core.analysis import analyze
+from repro.core.analysis import AnalysisEngine
 from repro.core.collectives import (
     HardwareModel, PhysicalFabric, plan_mesh_mapping,
 )
 
 FAMILIES = ["slimfly", "jellyfish", "xpander", "hyperx", "dragonfly", "fattree"]
 
-print(f"{'family':<11}{'routers':>8}{'servers':>9}{'diam':>6}{'avg':>7}"
-      f"{'fiedler':>9}{'bisec>=':>9}{'perm-imb':>9}")
+# perm-max vs exp-max: flows over the most loaded link under two routing
+# policies — one sampled uniform-next-hop routing vs the expectation of
+# uniform-over-all-shortest-paths routing. Same units; a lower exp-max
+# shows the headroom ECMP-style spreading over every shortest path buys.
+print(f"{'family':<11}{'routers':>8}{'diam':>6}{'avg':>7}"
+      f"{'mult':>7}{'+1':>8}{'+2':>10}{'interf':>8}{'perm-max':>9}{'exp-max':>9}")
 for fam in FAMILIES:
     g = T.by_servers(fam, 10_000)
-    rep = analyze(g)
+    eng = AnalysisEngine(g)
+    rep = eng.report()  # all stages share the engine's one APSP result
+    mult = eng.multiplicities()["multiplicity"]
     wl = W.make_traffic(g, "permutation", flows=2048)
-    tr = W.evaluate_workload(g, wl)
-    print(f"{fam:<11}{g.n:>8}{g.num_servers:>9}{rep['diameter']:>6}"
-          f"{rep['avg_path_length']:>7.2f}{rep.get('fiedler_lambda2', 0):>9.2f}"
-          f"{int(rep.get('bisection_lower_bound', 0)):>9}"
-          f"{tr['load_imbalance']:>9.2f}")
+    tr = W.evaluate_workload(g, wl, dist=eng.distances(), mult=mult)
+    print(f"{fam:<11}{g.n:>8}{rep['diameter']:>6}"
+          f"{rep['avg_path_length']:>7.2f}"
+          f"{rep['path_multiplicity_mean']:>7.2f}"
+          f"{rep['nonminimal_plus1_mean']:>8.1f}"
+          f"{rep['nonminimal_plus2_mean']:>10.1f}"
+          f"{rep['edge_interference_mean']:>8.3f}"
+          f"{tr['max_link_load']:>9.1f}"
+          f"{tr['max_expected_link_load']:>9.1f}")
 
 print("\nProduction fabric planning (v5e pod = 16x16 ICI torus):")
 for axes, pods in [({"data": 16, "model": 16}, 1),

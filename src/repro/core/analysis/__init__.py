@@ -1,5 +1,9 @@
-"""EvalNet analysis: APSP, spectral bounds, headline metrics, histograms."""
+"""EvalNet analysis: APSP, path multiplicities, spectral bounds, histograms."""
 from .apsp import apsp_dense, bfs_distances, sampled_distances  # noqa: F401
-from .metrics import analyze, path_diversity  # noqa: F401
+from .metrics import AnalysisEngine, analyze, path_diversity  # noqa: F401
+from .paths import (  # noqa: F401
+    brute_force_path_counts, edge_interference, path_counts_with_slack,
+    shortest_path_multiplicity,
+)
 from .spectral import fiedler_value, spectral_bounds  # noqa: F401
 from .histograms import path_length_histogram  # noqa: F401

@@ -1,4 +1,10 @@
-"""Headline topology metrics: diameter, mean path length, path diversity.
+"""Headline topology metrics behind one staged engine.
+
+`AnalysisEngine` runs the toolchain's stages — distances -> multiplicities
+-> diversity -> spectral -> histograms — with every stage reading the one
+shared APSP result instead of recomputing it. `analyze()` stays the
+one-call entry point and assembles the stage outputs into the familiar
+report dict.
 
 All exact metrics run on the dense APSP output when the router count permits
 (every assigned benchmark size does); otherwise sampled BFS estimates are
@@ -6,49 +12,171 @@ used and flagged in the report.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from ..graph import Graph
 from .apsp import apsp_dense, sampled_distances
 from .histograms import path_length_histogram
+from .paths import edge_interference, path_counts_with_slack
 
-__all__ = ["analyze", "path_diversity"]
+__all__ = ["AnalysisEngine", "analyze", "path_diversity"]
 
 DENSE_LIMIT = 8192  # routers; above this, sample
 
 
-def analyze(g: Graph, dense_limit: int = DENSE_LIMIT, n_sources: int = 64,
-            spectral: bool = True, use_kernel: bool = True) -> Dict:
-    """One-call EvalNet analysis: the toolchain's main entry point."""
-    report = dict(g.summary())
-    exact = g.n <= dense_limit
-    if exact:
-        dist = apsp_dense(g, use_kernel=use_kernel)
-        finite = dist[np.isfinite(dist)]
-        report["diameter"] = int(finite.max())
-        off_diag = finite.sum() / max(1, g.n * (g.n - 1))
-        report["avg_path_length"] = float(off_diag)
-        report["path_histogram"] = path_length_histogram(dist)
-        report["exact"] = True
-        report["path_diversity_mean"] = float(path_diversity(g, dist).mean())
-    else:
-        d = sampled_distances(g, n_sources=n_sources)
-        reachable = d[d >= 0]
-        report["diameter"] = int(reachable.max())  # lower bound from sample
-        report["avg_path_length"] = float(
-            reachable[reachable > 0].mean()
-        )
-        report["path_histogram"] = np.bincount(
-            reachable[reachable > 0]
-        ).tolist()
-        report["exact"] = False
-    if spectral and g.n <= 4 * dense_limit:
+class AnalysisEngine:
+    """Staged EvalNet analysis over one shared APSP result.
+
+    Stages (`STAGES`) are lazy and cached: ``distances`` is computed once
+    and every later stage reads it. ``report(stages=...)`` runs the
+    requested stages and merges their dicts; per-stage accessors
+    (:meth:`distances`, :meth:`multiplicities`, ...) expose the raw arrays
+    for callers like `workload.evaluate_workload` that want the matrices,
+    not the summary.
+    """
+
+    STAGES = ("distances", "multiplicities", "diversity", "spectral",
+              "histograms")
+
+    def __init__(self, g: Graph, dense_limit: int = DENSE_LIMIT,
+                 n_sources: int = 64, use_kernel: bool = True,
+                 interference_pairs: int = 64, seed: int = 0):
+        self.g = g
+        self.dense_limit = dense_limit
+        self.n_sources = n_sources
+        self.use_kernel = use_kernel
+        self.interference_pairs = interference_pairs
+        self.seed = seed
+        self._cache: Dict[str, object] = {}
+
+    @property
+    def exact(self) -> bool:
+        return self.g.n <= self.dense_limit
+
+    # -- stage accessors (raw arrays) -------------------------------------
+
+    def distances(self) -> np.ndarray:
+        """(n, n) float32 hop distances (exact mode) or sampled BFS rows."""
+        if "dist" not in self._cache:
+            if self.exact:
+                self._cache["dist"] = apsp_dense(
+                    self.g, use_kernel=self.use_kernel)
+            else:
+                self._cache["dist"] = sampled_distances(
+                    self.g, n_sources=self.n_sources, seed=self.seed)
+        return self._cache["dist"]
+
+    def multiplicities(self) -> Dict[str, np.ndarray]:
+        """Exact per-pair simple-path counts at slack 0 / +1 / +2."""
+        if not self.exact:
+            raise ValueError("multiplicity stage needs the dense APSP result")
+        if "paths" not in self._cache:
+            self._cache["paths"] = path_counts_with_slack(
+                self.g, self.distances(), use_kernel=self.use_kernel)
+        return self._cache["paths"]
+
+    # -- stage reports (summary dicts) -------------------------------------
+
+    def _report_distances(self) -> Dict:
+        rep: Dict = {}
+        if self.exact:
+            dist = self.distances()
+            finite = dist[np.isfinite(dist)]
+            rep["diameter"] = int(finite.max())
+            n = self.g.n
+            rep["avg_path_length"] = float(finite.sum() / max(1, n * (n - 1)))
+            rep["exact"] = True
+        else:
+            d = self.distances()
+            reachable = d[d >= 0]
+            rep["diameter"] = int(reachable.max())  # lower bound from sample
+            rep["avg_path_length"] = float(reachable[reachable > 0].mean())
+            rep["exact"] = False
+        return rep
+
+    def _report_multiplicities(self) -> Dict:
+        if not self.exact:
+            return {}
+        paths = self.multiplicities()
+        dist = self.distances()
+        off = np.isfinite(dist) & (dist > 0)
+        if not off.any():  # no reachable pair (edgeless / single router)
+            return {}
+        mult, p1, p2 = paths["multiplicity"], paths["plus1"], paths["plus2"]
+        return {
+            "path_multiplicity_mean": float(mult[off].mean()),
+            "path_multiplicity_min": int(mult[off].min()),
+            "path_multiplicity_max": int(mult[off].max()),
+            "nonminimal_plus1_mean": float(p1[off].mean()),
+            "nonminimal_plus2_mean": float(p2[off].mean()),
+            "path_counts_exact": bool(paths["exact"]),
+        }
+
+    def _report_diversity(self, with_interference: bool = True) -> Dict:
+        if not self.exact:
+            return {}
+        dist = self.distances()
+        rep = {"path_diversity_mean": float(
+            path_diversity(self.g, dist, seed=self.seed).mean())}
+        if with_interference:  # interference rides on the mult stage
+            rep.update(edge_interference(
+                self.g, dist, self.multiplicities()["multiplicity"],
+                pairs=self.interference_pairs, seed=self.seed))
+        return rep
+
+    def _report_spectral(self) -> Dict:
+        if self.g.n > 4 * self.dense_limit:
+            return {}
         from .spectral import spectral_bounds
 
-        report.update(spectral_bounds(g))
-    return report
+        return spectral_bounds(self.g)
+
+    def _report_histograms(self) -> Dict:
+        if self.exact:
+            hist = path_length_histogram(self.distances())
+        else:
+            d = self.distances()
+            reachable = d[d > 0]
+            hist = np.bincount(reachable).tolist()
+        return {"path_histogram": hist}
+
+    def report(self, stages: Optional[Sequence[str]] = None) -> Dict:
+        """Run the requested stages (default: all) and merge their summaries."""
+        stages = self.STAGES if stages is None else tuple(stages)
+        unknown = set(stages) - set(self.STAGES)
+        if unknown:
+            raise ValueError(f"unknown stages {sorted(unknown)}")
+        rep = dict(self.g.summary())
+        for stage in self.STAGES:  # canonical order regardless of input order
+            if stage not in stages:
+                continue
+            if stage == "diversity":
+                # interference needs multiplicities; only pay for it when
+                # that stage was requested, so output depends solely on
+                # the requested stage set (never on engine cache history)
+                rep.update(self._report_diversity(
+                    with_interference="multiplicities" in stages))
+            else:
+                rep.update(getattr(self, f"_report_{stage}")())
+        return rep
+
+
+def analyze(g: Graph, dense_limit: int = DENSE_LIMIT, n_sources: int = 64,
+            spectral: bool = True, use_kernel: bool = True,
+            multiplicities: bool = True) -> Dict:
+    """One-call EvalNet analysis: the toolchain's main entry point."""
+    engine = AnalysisEngine(g, dense_limit=dense_limit, n_sources=n_sources,
+                            use_kernel=use_kernel)
+    stages = ["distances", "histograms"]
+    if engine.exact:
+        stages.append("diversity")
+        if multiplicities:
+            stages.append("multiplicities")
+    if spectral:
+        stages.append("spectral")
+    return engine.report(stages)
 
 
 def path_diversity(g: Graph, dist: Optional[np.ndarray] = None,
@@ -56,6 +184,11 @@ def path_diversity(g: Graph, dist: Optional[np.ndarray] = None,
     """Shortest-path diversity for sampled (s, t): number of neighbours w of s
     with dist(w, t) = dist(s, t) - 1, i.e. distinct first hops on shortest
     paths. This is the metric adaptive-routing studies care about.
+
+    The exact all-pairs generalization is
+    `paths.path_counts_with_slack` / `paths.shortest_path_multiplicity`;
+    this sampled first-hop variant stays for huge instances and as the
+    historical metric.
     """
     if dist is None:
         dist = apsp_dense(g)

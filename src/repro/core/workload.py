@@ -17,7 +17,8 @@ import numpy as np
 from .graph import Graph
 from .analysis.apsp import apsp_dense, bfs_distances
 
-__all__ = ["Workload", "make_traffic", "evaluate_workload"]
+__all__ = ["Workload", "make_traffic", "evaluate_workload",
+           "expected_link_loads"]
 
 
 @dataclasses.dataclass
@@ -71,12 +72,49 @@ def _route_next_hops(g: Graph, dist: np.ndarray, src: int, dst: int,
     return path
 
 
+def expected_link_loads(g: Graph, wl: Workload, dist: np.ndarray,
+                        mult: np.ndarray) -> np.ndarray:
+    """Exact expected per-link load under uniform-random shortest-path routing.
+
+    A flow (s, t) crosses link {u, v} with probability
+    ``(sigma(s,u) * sigma(v,t) + sigma(s,v) * sigma(u,t)) / sigma(s,t)``
+    (each orientation term zero unless the link lies on a shortest path).
+    Unlike the sampled routing in `evaluate_workload`, this is the
+    expectation over *all* shortest paths — the multiplicity matrix from
+    `analysis.paths` is what makes it exact.
+    """
+    from .analysis.paths import pair_edge_loads
+
+    loads = np.zeros(g.num_edges, dtype=np.float64)
+    # batch flows in chunks: each chunk broadcasts (chunk, E) gathers (full
+    # fan-out would allocate flows x edges temporaries)
+    chunk = max(1, int(2 ** 22 // max(1, g.num_edges)))
+    for lo in range(0, len(wl.pairs), chunk):
+        s = wl.pairs[lo:lo + chunk, 0]
+        t = wl.pairs[lo:lo + chunk, 1]
+        total = mult[s, t]
+        valid = np.isfinite(dist[s, t]) & (total > 0)
+        if not valid.any():
+            continue
+        s, t, total = s[valid], t[valid], total[valid]
+        per_flow = pair_edge_loads(g, dist, mult, s, t)
+        loads += (per_flow / total[:, None]).sum(axis=0)
+    return loads
+
+
 def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
-                      seed: int = 0) -> Dict:
+                      seed: int = 0, mult: Optional[np.ndarray] = None) -> Dict:
     """Route every flow on a random shortest path; report link loads.
 
     max_link_load (flows across the most loaded link, normalized by the mean)
-    approximates the inverse saturation throughput of the pattern.
+    approximates the inverse saturation throughput of the pattern. When a
+    shortest-path multiplicity matrix ``mult`` is supplied (from
+    `analysis.paths.shortest_path_multiplicity`), the report also carries
+    the expected link loads under uniform-over-all-shortest-paths routing.
+    NB the two routing models differ: the sampler below draws a uniform
+    next hop at each branch (biasing toward low-branching paths), while
+    the expectation weights every shortest path equally — compare the two
+    max loads as alternative routing policies, not estimator vs estimand.
     """
     if dist is None:
         dist = apsp_dense(g)
@@ -92,7 +130,21 @@ def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
     if not loads:
         return {"flows": 0}
     vals = np.array(list(loads.values()), dtype=np.float64)
-    return {
+    rep = {}
+    if mult is not None:
+        exp = expected_link_loads(g, wl, dist, mult)
+        used = exp[exp > 0]
+        # NB: expected_load_imbalance normalizes by the mean over the full
+        # shortest-path *support* (every link any shortest path touches),
+        # while load_imbalance's mean is over the links one sampled routing
+        # happened to use — compare the max_* keys across the two models,
+        # not the imbalance ratios.
+        rep.update({
+            "max_expected_link_load": float(exp.max()),
+            "expected_load_imbalance": float(exp.max() / used.mean())
+            if used.size else 0.0,
+        })
+    rep.update({
         "workload": wl.name,
         "topology": g.name,
         "flows": int(len(wl.pairs)),
@@ -103,4 +155,5 @@ def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
         "mean_link_load": float(vals.mean()),
         "p99_link_load": float(np.percentile(vals, 99)),
         "load_imbalance": float(vals.max() / vals.mean()),
-    }
+    })
+    return rep

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the EvalNet analysis hot-spots.
 
-Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper with padding + interpret-mode dispatch), ref.py (pure-jnp oracle).
+Layout: semiring.py owns the generic blocked matmul (grid/BlockSpec
+scaffolding + `Semiring` algebra specs), <name>.py modules are thin
+instantiations, ops.py is the jit'd wrapper layer with padding +
+interpret-mode dispatch, ref.py holds the pure-jnp oracles.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, semiring  # noqa: F401

@@ -1,45 +1,18 @@
 """Min-plus (tropical semiring) blocked matmul — the APSP hot-spot kernel.
 
 TPU adaptation (DESIGN.md §3): the MXU only evaluates (+, x), so the tropical
-product runs on the VPU. The kernel tiles the (M, K) x (K, N) product into
-VMEM blocks; the K dimension is the innermost grid axis so each (i, j) output
-block stays resident in VMEM across the K sweep (revisiting semantics), and
-the inner K loop is unrolled in VREG-sized (sub_k, bn) slabs to keep the
-broadcast-add working set inside the vector registers.
-
-Block shapes must be multiples of the (8, 128) float32 tile; defaults are
-(128, 128, 128) giving a ~192 kB VMEM working set for f32.
+product runs on the VPU broadcast-add path of the generic semiring matmul
+(`semiring.py`), with the inner K loop unrolled in VREG-sized (sub_k, bn)
+slabs. All grid/BlockSpec scaffolding lives in `semiring.py`; this module is
+just the TROPICAL instantiation.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from .semiring import TROPICAL, semiring_matmul_pallas
 
 __all__ = ["minplus_matmul_pallas"]
-
-
-def _minplus_kernel(a_ref, b_ref, o_ref, *, sub_k: int):
-    """One (bm, bk) x (bk, bn) -> (bm, bn) tropical product-accumulate."""
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
-
-    a = a_ref[...]  # (bm, bk)
-    b = b_ref[...]  # (bk, bn)
-    bk = a.shape[1]
-    acc = o_ref[...]
-    # Unrolled K-blocking: process sub_k rows of b at a time so the
-    # (bm, sub_k, bn) broadcast sum stays register/VMEM-friendly.
-    for k0 in range(0, bk, sub_k):
-        a_slab = jax.lax.slice(a, (0, k0), (a.shape[0], k0 + sub_k))
-        b_slab = jax.lax.slice(b, (k0, 0), (k0 + sub_k, b.shape[1]))
-        s = a_slab[:, :, None] + b_slab[None, :, :]  # (bm, sub_k, bn)
-        acc = jnp.minimum(acc, jnp.min(s, axis=1))
-    o_ref[...] = acc
 
 
 def minplus_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
@@ -50,20 +23,6 @@ def minplus_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
     ``interpret=True`` executes the kernel body on CPU (this container);
     on TPU pass interpret=False.
     """
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, (bm, bn, bk))
-    assert bk % sub_k == 0
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
-        functools.partial(_minplus_kernel, sub_k=sub_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        interpret=interpret,
-    )(a, b)
+    (out,) = semiring_matmul_pallas(TROPICAL, (a,), (b,), bm=bm, bn=bn, bk=bk,
+                                    sub_k=sub_k, interpret=interpret)
+    return out

@@ -16,8 +16,11 @@ from . import ref
 from .minplus import minplus_matmul_pallas
 from .reachability import reachability_step_pallas
 from .seghist import value_histogram_pallas
+from .semiring import (BOOLEAN, COUNTING, TROPICAL, TROPICAL_COUNT,
+                       semiring_matmul_pallas)
 
-__all__ = ["minplus_matmul", "reachability_step", "value_histogram"]
+__all__ = ["minplus_matmul", "reachability_step", "value_histogram",
+           "count_matmul", "minplus_count_matmul"]
 
 # CPU containers run the kernels through the Pallas interpreter; on TPU flip
 # this (or pass interpret=False explicitly) to run compiled Mosaic kernels.
@@ -37,8 +40,8 @@ def minplus_matmul(a: jnp.ndarray, b: jnp.ndarray,
                    bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
     """Tropical (min, +) product with auto-padding (pad value +inf)."""
     m, n = a.shape[0], b.shape[1]
-    ap = _pad_to(a.astype(jnp.float32), bm, bk, jnp.inf)
-    bp = _pad_to(b.astype(jnp.float32), bk, bn, jnp.inf)
+    ap = _pad_to(a.astype(jnp.float32), bm, bk, TROPICAL.pad_a[0])
+    bp = _pad_to(b.astype(jnp.float32), bk, bn, TROPICAL.pad_b[0])
     out = minplus_matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
                                 interpret=INTERPRET)
     return out[:m, :n]
@@ -49,11 +52,46 @@ def reachability_step(a: jnp.ndarray, b: jnp.ndarray,
                       bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
     """Boolean-semiring product of {0,1} float masks, auto-padded with 0."""
     m, n = a.shape[0], b.shape[1]
-    ap = _pad_to(a.astype(jnp.float32), bm, bk, 0.0)
-    bp = _pad_to(b.astype(jnp.float32), bk, bn, 0.0)
+    ap = _pad_to(a.astype(jnp.float32), bm, bk, BOOLEAN.pad_a[0])
+    bp = _pad_to(b.astype(jnp.float32), bk, bn, BOOLEAN.pad_b[0])
     out = reachability_step_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
                                    interpret=INTERPRET)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def count_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                 bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """Counting semiring (+, x) product of f32 counts, auto-padded with 0.
+
+    Runs the MXU path of the generic semiring kernel; exact while counts
+    stay below 2**24.
+    """
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a.astype(jnp.float32), bm, bk, COUNTING.pad_a[0])
+    bp = _pad_to(b.astype(jnp.float32), bk, bn, COUNTING.pad_b[0])
+    (out,) = semiring_matmul_pallas(COUNTING, (ap,), (bp,), bm=bm, bn=bn,
+                                    bk=bk, interpret=INTERPRET)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def minplus_count_matmul(da: jnp.ndarray, ca: jnp.ndarray,
+                         db: jnp.ndarray, cb: jnp.ndarray,
+                         bm: int = 128, bn: int = 128, bk: int = 128):
+    """Fused tropical-with-count product over (dist, count) pairs.
+
+    Distances pad with +inf, counts with 0 (so padding never wins a tie).
+    Returns (dist, count) arrays.
+    """
+    m, n = da.shape[0], db.shape[1]
+    dap = _pad_to(da.astype(jnp.float32), bm, bk, TROPICAL_COUNT.pad_a[0])
+    cap = _pad_to(ca.astype(jnp.float32), bm, bk, TROPICAL_COUNT.pad_a[1])
+    dbp = _pad_to(db.astype(jnp.float32), bk, bn, TROPICAL_COUNT.pad_b[0])
+    cbp = _pad_to(cb.astype(jnp.float32), bk, bn, TROPICAL_COUNT.pad_b[1])
+    d, c = semiring_matmul_pallas(TROPICAL_COUNT, (dap, cap), (dbp, cbp),
+                                  bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return d[:m, :n], c[:m, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("num_bins", "bm", "bn"))
@@ -69,3 +107,5 @@ def value_histogram(x: jnp.ndarray, num_bins: int,
 minplus_matmul_ref = ref.minplus_matmul_ref
 reachability_step_ref = ref.reachability_step_ref
 value_histogram_ref = ref.value_histogram_ref
+count_matmul_ref = ref.count_matmul_ref
+minplus_count_matmul_ref = ref.minplus_count_matmul_ref

@@ -1,56 +1,23 @@
 """Fused boolean-semiring matmul (reachability / BFS frontier expansion).
 
 Unlike min-plus, the boolean product CAN use the MXU: cast {0,1} masks to
-f32, matmul (counts), then threshold. The Pallas kernel fuses the threshold
-into the epilogue so the count matrix never leaves VMEM: the K sweep
-accumulates into a VMEM scratch block (innermost K grid axis keeps the (i, j)
-block resident) and only the thresholded {0,1} mask is written back to HBM.
+f32, matmul (counts), then threshold. The generic semiring matmul
+(`semiring.py`) fuses the threshold into the epilogue so the count matrix
+never leaves VMEM; this module is just the BOOLEAN instantiation.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .semiring import BOOLEAN, semiring_matmul_pallas
 
 __all__ = ["reachability_step_pallas"]
-
-
-def _reach_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_blocks: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jax.lax.dot(
-        a_ref[...], b_ref[...],
-        preferred_element_type=jnp.float32,
-    )
-
-    @pl.when(pl.program_id(2) == k_blocks - 1)
-    def _epilogue():
-        o_ref[...] = (acc_ref[...] > 0.5).astype(o_ref.dtype)
 
 
 def reachability_step_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
                              bm: int = 128, bn: int = 128, bk: int = 128,
                              interpret: bool = True) -> jnp.ndarray:
     """One reachability squaring step over {0,1} float masks."""
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
-        functools.partial(_reach_kernel, k_blocks=grid[2]),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(a, b)
+    (out,) = semiring_matmul_pallas(BOOLEAN, (a,), (b,), bm=bm, bn=bn, bk=bk,
+                                    interpret=interpret)
+    return out

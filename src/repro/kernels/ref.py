@@ -6,7 +6,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["minplus_matmul_ref", "reachability_step_ref", "value_histogram_ref"]
+__all__ = [
+    "minplus_matmul_ref", "reachability_step_ref", "value_histogram_ref",
+    "count_matmul_ref", "minplus_count_matmul_ref",
+]
 
 
 def minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -22,6 +25,27 @@ def reachability_step_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """
     counts = a.astype(jnp.float32) @ b.astype(jnp.float32)
     return (counts > 0.5).astype(jnp.float32)
+
+
+def count_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Counting semiring (+, x) product — the plain matmul over f32 counts."""
+    return a.astype(jnp.float32) @ b.astype(jnp.float32)
+
+
+def minplus_count_matmul_ref(da: jnp.ndarray, ca: jnp.ndarray,
+                             db: jnp.ndarray, cb: jnp.ndarray):
+    """Fused tropical-with-count product over (dist, count) pairs.
+
+    out_d[i,j] = min_k da[i,k] + db[k,j];
+    out_c[i,j] = sum over minimizing k of ca[i,k] * cb[k,j].
+    Unreachable entries (dist inf) must carry count 0 so inf==inf ties
+    contribute nothing.
+    """
+    s = da[:, :, None] + db[None, :, :]                      # (m, k, n)
+    d = jnp.min(s, axis=1)
+    prod = ca[:, :, None] * cb[None, :, :]
+    c = jnp.sum(jnp.where(s == d[:, None, :], prod, 0.0), axis=1)
+    return d, c
 
 
 def value_histogram_ref(x: jnp.ndarray, num_bins: int) -> jnp.ndarray:

@@ -1,0 +1,239 @@
+"""Generic blocked Pallas semiring matmul — the one kernel behind APSP,
+reachability, and path counting.
+
+Every dense product this toolchain needs is a blocked matmul over some
+semiring; only the scalar algebra differs. This module owns the shared
+scaffolding exactly once — the (M/bm, N/bn, K/bk) grid with K innermost so
+each (i, j) output block stays resident in VMEM across the K sweep
+(revisiting semantics), and the BlockSpec index maps — and parameterizes the
+algebra with a :class:`Semiring` spec. Two execution paths:
+
+* **VPU path** (``mxu=False``): the semiring product is not an (+, x) dot, so
+  it runs on the VPU as a broadcast combine + axis reduce. The inner K loop
+  is unrolled in (sub_k, bn) slabs to keep the (bm, sub_k, bn) broadcast
+  working set inside the vector registers. Elements may be *tuples* of
+  arrays (``num_fields > 1``) — e.g. the fused (dist, count) product.
+* **MXU path** (``mxu=True``): the semiring product is a plain f32 dot plus
+  an elementwise epilogue (boolean threshold, or identity for counting), so
+  it accumulates in a VMEM scratch block and only the epilogue result is
+  written back to HBM.
+
+Block shapes must be multiples of the (8, 128) float32 tile; defaults are
+(128, 128, 128) giving a ~192 kB VMEM working set per field for f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "Semiring", "semiring_matmul_pallas",
+    "TROPICAL", "BOOLEAN", "COUNTING", "TROPICAL_COUNT",
+]
+
+Fields = Tuple[jnp.ndarray, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """Spec of one blocked-matmul algebra.
+
+    A semiring element is a tuple of ``num_fields`` scalars (one array per
+    field at matrix level). ``pad_a``/``pad_b`` are the multiplicative
+    annihilators used by `ops` to pad operands to block multiples — padding
+    must never win a reduction. ``acc_init`` is the additive identity the
+    accumulator starts from.
+
+    VPU path callables (required when ``mxu=False``), all over field tuples:
+      combine(a, b):    elementwise semiring multiply on a broadcast
+                        (bm, sub_k, bn) slab; a is (bm, sub_k, 1)-shaped,
+                        b is (1, sub_k, bn)-shaped.
+      kreduce(f):       semiring-add reduce over axis 1 -> (bm, bn) fields.
+      accumulate(x, y): binary semiring add of two (bm, bn) field tuples.
+
+    MXU path (``mxu=True``, single field only): the product is the plain f32
+    dot; ``epilogue`` maps the accumulated counts to the output block at the
+    last K step.
+    """
+
+    name: str
+    pad_a: Tuple[float, ...]
+    pad_b: Tuple[float, ...]
+    acc_init: Tuple[float, ...]
+    num_fields: int = 1
+    mxu: bool = False
+    combine: Optional[Callable[[Fields, Fields], Fields]] = None
+    kreduce: Optional[Callable[[Fields], Fields]] = None
+    accumulate: Optional[Callable[[Fields, Fields], Fields]] = None
+    epilogue: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def __post_init__(self):
+        if self.mxu:
+            assert self.num_fields == 1, "MXU path is single-field"
+            assert self.epilogue is not None
+        else:
+            assert self.combine and self.kreduce and self.accumulate
+
+
+# -- kernel bodies ------------------------------------------------------------
+
+def _vpu_kernel(*refs, sr: Semiring, sub_k: int):
+    """Generic (bm, bk) x (bk, bn) -> (bm, bn) semiring product-accumulate."""
+    nf = sr.num_fields
+    a_refs, b_refs, o_refs = refs[:nf], refs[nf:2 * nf], refs[2 * nf:]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        for o_ref, v in zip(o_refs, sr.acc_init):
+            o_ref[...] = jnp.full_like(o_ref, v)
+
+    a = [r[...] for r in a_refs]  # each (bm, bk)
+    b = [r[...] for r in b_refs]  # each (bk, bn)
+    bm, bk = a[0].shape
+    bn = b[0].shape[1]
+    acc = tuple(r[...] for r in o_refs)
+    # Unrolled K-blocking: process sub_k rows of b at a time so the
+    # (bm, sub_k, bn) broadcast working set stays register/VMEM-friendly.
+    for k0 in range(0, bk, sub_k):
+        a_slab = tuple(
+            jax.lax.slice(x, (0, k0), (bm, k0 + sub_k))[:, :, None] for x in a
+        )
+        b_slab = tuple(
+            jax.lax.slice(x, (k0, 0), (k0 + sub_k, bn))[None, :, :] for x in b
+        )
+        term = sr.kreduce(sr.combine(a_slab, b_slab))
+        acc = sr.accumulate(acc, term)
+    for o_ref, v in zip(o_refs, acc):
+        o_ref[...] = v
+
+
+def _mxu_kernel(a_ref, b_ref, o_ref, acc_ref, *, sr: Semiring, k_blocks: int):
+    """Fused dot-accumulate + epilogue; counts never leave VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], b_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_blocks - 1)
+    def _epilogue():
+        o_ref[...] = sr.epilogue(acc_ref[...]).astype(o_ref.dtype)
+
+
+# -- entry point --------------------------------------------------------------
+
+def semiring_matmul_pallas(sr: Semiring, a: Fields, b: Fields, *,
+                           bm: int = 128, bn: int = 128, bk: int = 128,
+                           sub_k: int = 8, interpret: bool = True) -> Fields:
+    """Blocked (M, K) x (K, N) product over ``sr``; returns one array per field.
+
+    M, N, K must divide into blocks (use `ops` for auto-padding).
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on TPU pass interpret=False.
+    """
+    nf = sr.num_fields
+    assert len(a) == nf and len(b) == nf, (len(a), len(b), nf)
+    m, k = a[0].shape
+    k2, n = b[0].shape
+    assert k == k2, (a[0].shape, b[0].shape)
+    assert all(x.shape == (m, k) for x in a)
+    assert all(x.shape == (k, n) for x in b)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (a[0].shape, b[0].shape, (bm, bn, bk))
+    assert bk % sub_k == 0
+    grid = (m // bm, n // bn, k // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = [jax.ShapeDtypeStruct((m, n), x.dtype) for x in a]
+
+    if sr.mxu:
+        kernel = functools.partial(_mxu_kernel, sr=sr, k_blocks=grid[2])
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    else:
+        kernel = functools.partial(_vpu_kernel, sr=sr, sub_k=sub_k)
+        scratch = []
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec] * nf + [b_spec] * nf,
+        out_specs=o_spec if nf == 1 else [o_spec] * nf,
+        out_shape=out_shape[0] if nf == 1 else out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*a, *b)
+    return (out,) if nf == 1 else tuple(out)
+
+
+# -- the semirings this toolchain ships ---------------------------------------
+
+_INF = float("inf")
+
+#: (min, +) over distances — the APSP hot spot. Runs on the VPU: the MXU
+#: only evaluates (+, x).
+TROPICAL = Semiring(
+    name="tropical",
+    pad_a=(_INF,), pad_b=(_INF,), acc_init=(_INF,),
+    combine=lambda a, b: (a[0] + b[0],),
+    kreduce=lambda f: (jnp.min(f[0], axis=1),),
+    accumulate=lambda x, y: (jnp.minimum(x[0], y[0]),),
+)
+
+#: (or, and) over {0,1} masks — reachability / BFS frontier expansion.
+#: MXU-eligible: dot the masks as f32 counts, threshold in the epilogue.
+BOOLEAN = Semiring(
+    name="boolean",
+    pad_a=(0.0,), pad_b=(0.0,), acc_init=(0.0,),
+    mxu=True,
+    epilogue=lambda acc: acc > 0.5,
+)
+
+#: (+, x) over nonneg counts — walk/path counting. The MXU's native algebra;
+#: exact while counts stay below 2**24 (f32 integer range).
+COUNTING = Semiring(
+    name="counting",
+    pad_a=(0.0,), pad_b=(0.0,), acc_init=(0.0,),
+    mxu=True,
+    epilogue=lambda acc: acc,
+)
+
+
+def _tc_combine(a: Fields, b: Fields) -> Fields:
+    return (a[0] + b[0], a[1] * b[1])
+
+
+def _tc_kreduce(f: Fields) -> Fields:
+    d = jnp.min(f[0], axis=1)
+    c = jnp.sum(jnp.where(f[0] == d[:, None, :], f[1], 0.0), axis=1)
+    return (d, c)
+
+
+def _tc_accumulate(x: Fields, y: Fields) -> Fields:
+    d = jnp.minimum(x[0], y[0])
+    c = (jnp.where(x[0] == d, x[1], 0.0) + jnp.where(y[0] == d, y[1], 0.0))
+    return (d, c)
+
+
+#: Fused (dist, count) pairs: lexicographic (min, +) on dist with count
+#: summed over ties — one VPU pass yields shortest-path length AND its
+#: multiplicity. Additive identity (inf, 0), multiplicative pad (inf, 0):
+#: unreachable entries carry count 0, so inf==inf ties contribute nothing.
+TROPICAL_COUNT = Semiring(
+    name="tropical_count",
+    num_fields=2,
+    pad_a=(_INF, 0.0), pad_b=(_INF, 0.0), acc_init=(_INF, 0.0),
+    combine=_tc_combine,
+    kreduce=_tc_kreduce,
+    accumulate=_tc_accumulate,
+)

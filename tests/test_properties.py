@@ -1,6 +1,9 @@
 """Hypothesis property-based tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp
