@@ -2,26 +2,29 @@
 
 Compares the assigned low-diameter families at a matched ~10k-server cost
 point (the Fig-1-style comparison) — including the paper's path-diversity
-columns: exact shortest-path multiplicity and non-minimal path counts at
-+1/+2 length slack — and prints the collective-planner view of the
-production TPU fabric.
+columns (exact shortest-path multiplicity, non-minimal counts at +1/+2
+slack) and the routing subsystem's view: exact expected max link load under
+three routing models (ECMP over all shortest paths, Valiant, slack-1
+non-minimal), per-pair saturation throughput for two families, and the
+collective-planner view of the production TPU fabric.
 
   PYTHONPATH=src python examples/topology_analysis.py
 """
-from repro.core import topology as T, workload as W
+from repro.core import routing as R, topology as T, workload as W
 from repro.core.analysis import AnalysisEngine
 from repro.core.collectives import (
-    HardwareModel, PhysicalFabric, plan_mesh_mapping,
+    PhysicalFabric, plan_mesh_mapping, pod_traffic_report,
 )
 
 FAMILIES = ["slimfly", "jellyfish", "xpander", "hyperx", "dragonfly", "fattree"]
 
-# perm-max vs exp-max: flows over the most loaded link under two routing
-# policies — one sampled uniform-next-hop routing vs the expectation of
-# uniform-over-all-shortest-paths routing. Same units; a lower exp-max
-# shows the headroom ECMP-style spreading over every shortest path buys.
+# samp-max: flows over the most loaded link, one sampled uniform-over-all-
+# shortest-paths route per flow. ecmp/vlb/slack1-max: the *exact expected*
+# max link load when the same demand is pushed through each routing model
+# (routing.assign) — sampled estimates ecmp; Valiant trades hops for spread.
 print(f"{'family':<11}{'routers':>8}{'diam':>6}{'avg':>7}"
-      f"{'mult':>7}{'+1':>8}{'+2':>10}{'interf':>8}{'perm-max':>9}{'exp-max':>9}")
+      f"{'mult':>7}{'+1':>8}{'interf':>8}"
+      f"{'samp-max':>9}{'ecmp-max':>9}{'vlb-max':>9}{'slack1-max':>11}")
 for fam in FAMILIES:
     g = T.by_servers(fam, 10_000)
     eng = AnalysisEngine(g)
@@ -29,14 +32,35 @@ for fam in FAMILIES:
     mult = eng.multiplicities()["multiplicity"]
     wl = W.make_traffic(g, "permutation", flows=2048)
     tr = W.evaluate_workload(g, wl, dist=eng.distances(), mult=mult)
+    demand = wl.demand_matrix(g)
+    # f64 BLAS path for the model columns: the walkthrough favours turnaround;
+    # the Pallas counting-kernel path is timed in benchmarks/bench_collectives
+    vlb = R.ValiantVLB.from_engine(eng, use_kernel=False)
+    slack1 = R.SlackRouting.from_engine(eng, slack=1, use_kernel=False)
     print(f"{fam:<11}{g.n:>8}{rep['diameter']:>6}"
           f"{rep['avg_path_length']:>7.2f}"
           f"{rep['path_multiplicity_mean']:>7.2f}"
           f"{rep['nonminimal_plus1_mean']:>8.1f}"
-          f"{rep['nonminimal_plus2_mean']:>10.1f}"
           f"{rep['edge_interference_mean']:>8.3f}"
           f"{tr['max_link_load']:>9.1f}"
-          f"{tr['max_expected_link_load']:>9.1f}")
+          f"{tr['max_expected_link_load']:>9.1f}"
+          f"{vlb.link_loads(demand).max():>9.1f}"
+          f"{slack1.link_loads(demand).max():>11.1f}")
+
+# Per-pair saturation throughput (max concurrent flow, self-certifying
+# bounds): the common fraction lambda of every pairwise demand the fabric
+# carries simultaneously — the paper's "exact throughput between every
+# router pair" number, at a matched ~2k-server cost point.
+print("\nPer-pair saturation throughput (all-to-all demand, eps=0.5):")
+for fam in ("slimfly", "fattree"):
+    g = T.by_servers(fam, 2_000)
+    eng = AnalysisEngine(g, throughput_demand="all-pairs",
+                         throughput_eps=0.5, throughput_rounds=32)
+    tp = eng.throughput()
+    print(f"  {fam:<9} n={g.n:<5} lambda in [{tp['throughput']:.5f}, "
+          f"{tp['upper_bound']:.5f}]  rounds={tp['rounds']} "
+          f"converged={tp['converged']} "
+          f"aggregate={tp['aggregate_throughput']:.0f}")
 
 print("\nProduction fabric planning (v5e pod = 16x16 ICI torus):")
 for axes, pods in [({"data": 16, "model": 16}, 1),
@@ -45,3 +69,14 @@ for axes, pods in [({"data": 16, "model": 16}, 1),
     print(f"  mesh {axes} -> {plan.assignment}  "
           f"bundle={plan.score_seconds*1e3:.3f} ms  "
           f"links={[f'{k}:{v.kind}' for k, v in plan.axis_links.items()]}")
+
+# congestion sanity-check of the planned pod: all-to-all chip demand routed
+# on the physical torus through the same assignment engine
+import numpy as np  # noqa: E402
+
+fab = PhysicalFabric((8, 8), 1)
+n = fab.chips_per_pod
+rep = pod_traffic_report(fab, np.ones((n, n)) - np.eye(n))
+print(f"\nPod torus {fab.torus_dims} all-to-all congestion: "
+      f"max={rep['max_link_load']:.1f} imbalance={rep['load_imbalance']:.2f} "
+      f"({rep['routing_model']})")

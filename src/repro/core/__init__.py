@@ -4,5 +4,5 @@ The paper's primary contribution, in JAX: `topology` (generators),
 `analysis` (metrics), `collectives` (topology-aware cost models feeding the
 framework's sharding planner and roofline), `workload` (traffic matrices).
 """
-from . import analysis, collectives, topology, workload  # noqa: F401
+from . import analysis, collectives, routing, topology, workload  # noqa: F401
 from .graph import Graph  # noqa: F401

@@ -1,5 +1,7 @@
 """EvalNet analysis: APSP, path multiplicities, spectral bounds, histograms."""
-from .apsp import apsp_dense, bfs_distances, sampled_distances  # noqa: F401
+from .apsp import (  # noqa: F401
+    apsp_dense, apsp_from_lengths, bfs_distances, sampled_distances,
+)
 from .metrics import AnalysisEngine, analyze, path_diversity  # noqa: F401
 from .paths import (  # noqa: F401
     brute_force_path_counts, edge_interference, path_counts_with_slack,

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from ..graph import Graph
 
-__all__ = ["apsp_dense", "bfs_distances", "sampled_distances"]
+__all__ = ["apsp_dense", "apsp_from_lengths", "bfs_distances",
+           "sampled_distances"]
 
 _INF = np.float32(np.inf)
 
@@ -49,6 +50,42 @@ def apsp_dense(g: Graph, use_kernel: bool = True,
         dj = nxt
     out = np.asarray(dj)[:n, :n]
     return out
+
+
+def apsp_from_lengths(lengths: np.ndarray, use_kernel: bool = True,
+                      block: int = 256,
+                      max_squarings: Optional[int] = None) -> np.ndarray:
+    """APSP over an arbitrary nonnegative (n, n) edge-length matrix.
+
+    ``lengths`` follows the `Graph.distance_seed` convention: 0 on the
+    diagonal, the directed edge length at [u, v], +inf where there is no
+    edge. Min-plus squaring through the tropical Pallas kernel (or the jnp
+    oracle), converging in ceil(log2(longest shortest-path hop count))
+    products. This is the weighted-shortest-path oracle the throughput
+    engine calls once per multiplicative-weights round, batched over all
+    router pairs at once.
+    """
+    from ... import kernels
+
+    lengths = np.asarray(lengths, np.float32)
+    n = lengths.shape[0]
+    if max_squarings is None:
+        max_squarings = max(1, int(np.ceil(np.log2(max(2, n)))))
+    pad = (-n) % block
+    d = lengths
+    if pad:
+        d = np.pad(d, ((0, pad), (0, pad)), constant_values=_INF)
+        for i in range(n, n + pad):
+            d[i, i] = 0.0
+    dj = jnp.asarray(d)
+    product = kernels.ops.minplus_matmul if use_kernel else _minplus_jnp
+    for _ in range(max_squarings):
+        nxt = product(dj, dj)
+        if bool(jnp.all(nxt == dj)):
+            dj = nxt
+            break
+        dj = nxt
+    return np.asarray(dj)[:n, :n]
 
 
 def _minplus_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -1,10 +1,10 @@
 """Headline topology metrics behind one staged engine.
 
 `AnalysisEngine` runs the toolchain's stages — distances -> multiplicities
--> diversity -> spectral -> histograms — with every stage reading the one
-shared APSP result instead of recomputing it. `analyze()` stays the
-one-call entry point and assembles the stage outputs into the familiar
-report dict.
+-> diversity -> spectral -> histograms -> throughput — with every stage
+reading the one shared APSP result instead of recomputing it. `analyze()`
+stays the one-call entry point and assembles the stage outputs into the
+familiar report dict.
 
 All exact metrics run on the dense APSP output when the router count permits
 (every assigned benchmark size does); otherwise sampled BFS estimates are
@@ -38,17 +38,30 @@ class AnalysisEngine:
     """
 
     STAGES = ("distances", "multiplicities", "diversity", "spectral",
-              "histograms")
+              "histograms", "throughput")
+    #: `report(stages=None)` runs these; throughput is opt-in (it runs an
+    #: iterative max-concurrent-flow solve, not a closed-form metric)
+    DEFAULT_STAGES = ("distances", "multiplicities", "diversity", "spectral",
+                      "histograms")
+
+    #: all-pairs throughput demand above this router count would mean n^2
+    #: commodities; larger instances fall back to a permutation demand
+    ALL_PAIRS_LIMIT = 256
 
     def __init__(self, g: Graph, dense_limit: int = DENSE_LIMIT,
                  n_sources: int = 64, use_kernel: bool = True,
-                 interference_pairs: int = 64, seed: int = 0):
+                 interference_pairs: int = 64, seed: int = 0,
+                 throughput_eps: float = 0.25, throughput_rounds: int = 64,
+                 throughput_demand: str = "auto"):
         self.g = g
         self.dense_limit = dense_limit
         self.n_sources = n_sources
         self.use_kernel = use_kernel
         self.interference_pairs = interference_pairs
         self.seed = seed
+        self.throughput_eps = throughput_eps
+        self.throughput_rounds = throughput_rounds
+        self.throughput_demand = throughput_demand
         self._cache: Dict[str, object] = {}
 
     @property
@@ -76,6 +89,35 @@ class AnalysisEngine:
             self._cache["paths"] = path_counts_with_slack(
                 self.g, self.distances(), use_kernel=self.use_kernel)
         return self._cache["paths"]
+
+    def throughput(self) -> Dict[str, object]:
+        """Per-pair saturation throughput (max concurrent flow) report.
+
+        Uniform all-to-all demand for n <= ALL_PAIRS_LIMIT routers (the
+        paper's per-pair saturation throughput); a random permutation
+        demand above that (scalable proxy; flagged in the report). The
+        result carries both the feasible lower bound and the LP-dual upper
+        bound — see `routing.throughput.max_concurrent_flow`.
+        """
+        if not self.exact:
+            raise ValueError("throughput stage needs the dense APSP result")
+        if "throughput" not in self._cache:
+            from ..routing import concurrent_flow_demand, max_concurrent_flow
+
+            pattern = self.throughput_demand
+            if pattern == "auto":
+                pattern = ("all-pairs" if self.g.n <= self.ALL_PAIRS_LIMIT
+                           else "permutation")
+            dist = self.distances()
+            demand = concurrent_flow_demand(self.g, dist, pattern,
+                                            seed=self.seed)
+            res = max_concurrent_flow(
+                self.g, demand, eps=self.throughput_eps,
+                max_rounds=self.throughput_rounds,
+                use_kernel=self.use_kernel, seed=self.seed)
+            res["demand_pattern"] = pattern
+            self._cache["throughput"] = res
+        return self._cache["throughput"]
 
     # -- stage reports (summary dicts) -------------------------------------
 
@@ -142,9 +184,25 @@ class AnalysisEngine:
             hist = np.bincount(reachable).tolist()
         return {"path_histogram": hist}
 
+    def _report_throughput(self) -> Dict:
+        # throughput is never in DEFAULT_STAGES, so reaching this stage
+        # means the caller asked for it explicitly: let the accessor raise
+        # on sampled mode rather than silently answering with nothing
+        res = self.throughput()
+        return {
+            "saturation_throughput": res["throughput"],
+            "throughput_upper_bound": res["upper_bound"],
+            "throughput_gap": res["gap"],
+            "aggregate_throughput": res["aggregate_throughput"],
+            "throughput_rounds": res["rounds"],
+            "throughput_converged": res["converged"],
+            "throughput_demand": res["demand_pattern"],
+        }
+
     def report(self, stages: Optional[Sequence[str]] = None) -> Dict:
-        """Run the requested stages (default: all) and merge their summaries."""
-        stages = self.STAGES if stages is None else tuple(stages)
+        """Run the requested stages (default: DEFAULT_STAGES) and merge
+        their summaries."""
+        stages = self.DEFAULT_STAGES if stages is None else tuple(stages)
         unknown = set(stages) - set(self.STAGES)
         if unknown:
             raise ValueError(f"unknown stages {sorted(unknown)}")
@@ -165,15 +223,24 @@ class AnalysisEngine:
 
 def analyze(g: Graph, dense_limit: int = DENSE_LIMIT, n_sources: int = 64,
             spectral: bool = True, use_kernel: bool = True,
-            multiplicities: bool = True) -> Dict:
-    """One-call EvalNet analysis: the toolchain's main entry point."""
+            multiplicities: bool = True, throughput: bool = False,
+            throughput_eps: float = 0.25) -> Dict:
+    """One-call EvalNet analysis: the toolchain's main entry point.
+
+    ``throughput=True`` additionally runs the max-concurrent-flow stage
+    (exact mode only) — the ``saturation_throughput`` /
+    ``throughput_upper_bound`` keys; see `routing.throughput`.
+    """
     engine = AnalysisEngine(g, dense_limit=dense_limit, n_sources=n_sources,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel,
+                            throughput_eps=throughput_eps)
     stages = ["distances", "histograms"]
     if engine.exact:
         stages.append("diversity")
         if multiplicities:
             stages.append("multiplicities")
+        if throughput:
+            stages.append("throughput")
     if spectral:
         stages.append("spectral")
     return engine.report(stages)

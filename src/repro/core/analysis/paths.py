@@ -69,12 +69,10 @@ def pair_edge_loads(g: Graph, dist: np.ndarray, mult: np.ndarray,
 
 
 def _count_product(use_kernel: bool):
-    import jax.numpy as jnp
-    if use_kernel:
-        from ... import kernels
-        return lambda a, b: np.asarray(kernels.ops.count_matmul(
-            jnp.asarray(a), jnp.asarray(b)))
-    return lambda a, b: np.asarray(a.astype(np.float64) @ b.astype(np.float64))
+    # one canonical kernel/oracle dispatch, shared with the assignment engine
+    from ..routing.assign import count_product
+
+    return count_product(use_kernel)
 
 
 def shortest_path_multiplicity(

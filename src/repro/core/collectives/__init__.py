@@ -3,4 +3,6 @@ from .cost_model import (  # noqa: F401
     AxisLink, COLLECTIVE_KINDS, HardwareModel, collective_time,
     hierarchical_all_reduce_time,
 )
-from .mapping import MappingPlan, PhysicalFabric, plan_mesh_mapping  # noqa: F401
+from .mapping import (  # noqa: F401
+    MappingPlan, PhysicalFabric, plan_mesh_mapping, pod_traffic_report,
+)

@@ -16,11 +16,14 @@ import itertools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ..graph import Graph
 from ..topology import make
 from .cost_model import AxisLink, HardwareModel, collective_time
 
-__all__ = ["PhysicalFabric", "plan_mesh_mapping", "MappingPlan"]
+__all__ = ["PhysicalFabric", "plan_mesh_mapping", "MappingPlan",
+           "pod_traffic_report"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +50,30 @@ class MappingPlan:
 
     def link_for(self, axis_name: str) -> AxisLink:
         return self.axis_links[axis_name]
+
+
+def pod_traffic_report(fabric: PhysicalFabric, demand,
+                       model: str = "uniform_shortest",
+                       use_kernel: bool = True) -> Dict[str, float]:
+    """Physical link loads when a traffic matrix rides the pod torus.
+
+    Complements the analytic `cost_model` score: pushes an (n, n)
+    chip-level demand matrix (n = chips per pod) through the routing
+    subsystem's assignment engine on the actual torus graph and returns
+    the standard link-load statistics (`routing.assign.link_load_stats`),
+    so a planned mapping's collective mix can be sanity-checked against
+    exact expected per-link congestion under a chosen routing model.
+    """
+    from ..analysis import AnalysisEngine
+    from ..routing import link_load_stats, make_model
+
+    g = fabric.pod_graph()
+    engine = AnalysisEngine(g, use_kernel=use_kernel)
+    loads = make_model(model, engine).link_loads(
+        np.asarray(demand, dtype=float))
+    rep = link_load_stats(loads, g.num_edges)
+    rep["routing_model"] = model
+    return rep
 
 
 def _axis_factorizations(mesh_axis: int, torus_dims: Sequence[int]):

@@ -1,0 +1,252 @@
+"""Vectorized flow assignment: traffic matrix -> exact expected link loads.
+
+This is the middle layer of the routing subsystem: a :class:`~..models`
+routing model describes *where* flows may go (per-pair next-hop
+probabilities); this module pushes a whole (n, n) demand matrix through that
+description with dense counting-semiring matmuls (`repro.kernels.semiring`,
+``COUNTING`` instantiation via `kernels.ops.count_matmul`) — no per-flow
+Python loops anywhere.
+
+The workhorse identity: under uniform-over-all-shortest-paths (exact ECMP)
+routing, the expected flow of demand (s, t) across directed edge (u, v) is
+
+    demand[s,t] * sigma(s,u) * sigma(v,t) / sigma(s,t)
+        iff  d(s,u) + 1 + d(v,t) == d(s,t)
+
+(sigma = shortest-path multiplicity from `analysis.paths`). Splitting by the
+position ``a = d(s,u)`` of u on the path and the pair distance ``L``, the
+whole (n, n) directed load matrix is a sum of bilinear forms
+
+    load = A  *  sum_L sum_{a=0}^{L-1}  F_a^T @ W_L @ F_{L-1-a}
+
+with ``F_a[s,u] = sigma(s,u) [d(s,u)=a]`` the level-a multiplicity frontier
+and ``W_L = (demand / sigma) [dist=L]`` the normalized per-level demand —
+O(diameter^2) dense matmuls total, each MXU-eligible. The same engine with
+``F_a = A^a`` (walk counts instead of shortest-path frontiers) yields loads
+for slack-limited non-minimal routing (`models.SlackRouting`).
+
+Link-load reporting convention (the one place it is defined)
+------------------------------------------------------------
+Loads are reported *per undirected link* in ``g.edges`` order, summing both
+orientations (full-duplex links, one shared counter). Summary statistics
+(``link_load_stats``) are computed over the *used support* — links with
+strictly positive load — so ``load_imbalance = max / mean`` compares the
+most-loaded link against the average over links that carry any traffic.
+Both the sampled and the expected reports in `workload.evaluate_workload`
+use this helper, so their ``*_imbalance`` ratios are directly comparable.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..graph import Graph
+
+__all__ = ["demand_matrix", "ecmp_link_loads", "walk_slack_link_loads",
+           "directed_to_link_loads", "link_load_stats", "count_product",
+           "padded_neighbors", "sample_columns"]
+
+
+def count_product(use_kernel: bool) -> Callable[[np.ndarray, np.ndarray],
+                                                np.ndarray]:
+    """(+, x) matmul: Pallas COUNTING kernel, or f64 numpy oracle."""
+    if use_kernel:
+        import jax.numpy as jnp
+
+        from ... import kernels
+
+        return lambda a, b: np.asarray(kernels.ops.count_matmul(
+            jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)))
+    return lambda a, b: np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+
+def padded_neighbors(g: Graph, with_edge_ids: bool = False):
+    """CSR neighbour lists padded to (n, maxdeg) + validity mask.
+
+    The shared representation behind every vectorized per-hop step (the
+    workload sampler, the throughput successor chase): a hop's working set
+    is (rows, maxdeg) gathers instead of dense (rows, n) rows.
+
+    With ``with_edge_ids`` a third (n, maxdeg) array maps each slot to its
+    *directed* edge index (0..2E-1: id < E is the u->v orientation of
+    ``g.edges[id]``, id >= E the reverse of ``g.edges[id - E]``), so per-hop
+    load accumulation can scatter into an O(E) vector instead of an (n, n)
+    matrix.
+    """
+    indptr, indices = g.csr()
+    deg = np.diff(indptr)
+    maxdeg = int(deg.max(initial=1))
+    valid = np.arange(maxdeg)[None, :] < deg[:, None]
+    nbrs = np.zeros((g.n, maxdeg), np.int64)
+    nbrs[valid] = indices
+    if not with_edge_ids:
+        return nbrs, valid
+    # csr() sorts concat(u, v) stably: CSR slot p holds directed edge
+    # order[p] of the concat([u->v], [v->u]) list — the same ordering the
+    # throughput engine's capacity vectors use
+    order = np.argsort(np.concatenate([g.edges[:, 0], g.edges[:, 1]]),
+                       kind="stable")
+    eids = np.zeros((g.n, maxdeg), np.int64)
+    eids[valid] = order
+    return nbrs, valid, eids
+
+
+def sample_columns(weights: np.ndarray, mask: np.ndarray,
+                   rng: np.random.Generator) -> np.ndarray:
+    """Per row, draw one column index with probability ∝ ``weights``.
+
+    ``mask`` marks the admissible columns (weights must be 0 outside it and
+    every row must have at least one admissible column). Cumulative-sum
+    inverse sampling; rows where float rounding pushes the draw to the
+    total are repaired onto the first admissible column.
+    """
+    cums = np.cumsum(weights, axis=1)
+    draw = rng.random(len(weights))[:, None] * cums[:, -1:]
+    slot = (cums > draw).argmax(axis=1)
+    bad = ~mask[np.arange(len(slot)), slot]
+    if bad.any():
+        slot[bad] = mask[bad].argmax(axis=1)
+    return slot
+
+
+def demand_matrix(g: Graph, pairs: np.ndarray,
+                  volume: float = 1.0) -> np.ndarray:
+    """(n, n) f64 demand from (F, 2) flow pairs: volume per flow, summed."""
+    d = np.zeros((g.n, g.n), dtype=np.float64)
+    np.add.at(d, (pairs[:, 0], pairs[:, 1]), volume)
+    np.fill_diagonal(d, 0.0)  # self-demand never crosses a link
+    return d
+
+
+def _bilinear_edge_loads(
+        adj: np.ndarray,
+        terms: Iterable[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+        product: Callable[[np.ndarray, np.ndarray], np.ndarray],
+) -> np.ndarray:
+    """``adj * sum_i  Fa_i^T @ W_i @ Fb_i`` — the shared assignment core."""
+    acc: Optional[np.ndarray] = None
+    for fa, w, fb in terms:
+        if not w.any():
+            continue
+        term = product(product(fa.T, w), fb)
+        acc = term if acc is None else acc + term
+    if acc is None:
+        return np.zeros_like(adj, dtype=np.float64)
+    return adj * acc
+
+
+def ecmp_link_loads(g: Graph, dist: np.ndarray, mult: np.ndarray,
+                    demand: np.ndarray, use_kernel: bool = True,
+                    directed: bool = False) -> np.ndarray:
+    """Exact expected loads under uniform-over-all-shortest-paths routing.
+
+    Returns (E,) undirected link loads in ``g.edges`` order (or the (n, n)
+    directed load matrix with ``directed=True``). Demand on unreachable or
+    diagonal pairs is ignored. The f32 kernel path is exact while every
+    intermediate stays below 2**24; ``use_kernel=False`` accumulates in f64.
+    """
+    n = g.n
+    finite = np.isfinite(dist)
+    off = finite & (dist > 0) & (mult > 0)
+    w_all = np.where(off, np.divide(demand, mult, where=off,
+                                    out=np.zeros((n, n))), 0.0)
+    diam = int(dist[finite].max()) if finite.any() else 0
+    adj = g.adjacency_dense(np.float64)
+    product = count_product(use_kernel)
+
+    # level frontiers F_a; built once, reused across (L, a) terms
+    frontiers = [np.where(dist == a, mult, 0.0).astype(np.float64)
+                 for a in range(diam)]
+
+    def terms():
+        for level in range(1, diam + 1):
+            w_l = np.where(dist == level, w_all, 0.0)
+            if not w_l.any():
+                continue
+            for a in range(level):
+                yield frontiers[a], w_l, frontiers[level - 1 - a]
+
+    loads = _bilinear_edge_loads(adj, terms(), product)
+    return loads if directed else directed_to_link_loads(g, loads)
+
+
+def walk_slack_link_loads(g: Graph, dist: np.ndarray, demand: np.ndarray,
+                          slack: int, class_weights: Sequence[np.ndarray],
+                          use_kernel: bool = True,
+                          directed: bool = False) -> np.ndarray:
+    """Expected loads when demand spreads uniformly over length-(d+j) walks.
+
+    ``class_weights[j][s, t]`` is the probability mass pair (s, t) routes in
+    slack class j (rows need not be normalized globally; each entry is the
+    per-pair probability of class j, summing to 1 over j on routed pairs).
+    Within class j the flow spreads uniformly over all walks of length
+    ``d(s,t)+j``; for j <= 1 every such walk is a simple path (a revisit
+    would shorten the walk below d), so classes 0 and 1 are exactly uniform
+    over the paper's slack-path sets. Class 2 walks include one-bounce
+    detours (see `analysis.paths`) — documented walk-model relaxation.
+    """
+    n = g.n
+    adj_f = g.adjacency_dense(np.float64)
+    product = count_product(use_kernel)
+    finite = np.isfinite(dist)
+    diam = int(dist[finite].max()) if finite.any() else 0
+    max_len = diam + slack
+    # walk-count powers A^0 .. A^(max_len - 1), plus totals up to max_len
+    powers = [np.eye(n)]
+    for _ in range(max_len):
+        powers.append(product(powers[-1], adj_f))
+
+    def terms():
+        for j in range(slack + 1):
+            cw = class_weights[j]
+            for level in range(1 if j == 0 else 0, diam + 1):
+                m = level + j
+                if m == 0:
+                    continue
+                total = powers[m]
+                sel = (dist == level) & (total > 0) & (cw > 0)
+                if not sel.any():
+                    continue
+                w_lj = np.where(sel, demand * cw / np.where(sel, total, 1.0),
+                                0.0)
+                for a in range(m):
+                    yield powers[a], w_lj, powers[m - 1 - a]
+
+    loads = _bilinear_edge_loads(adj_f, terms(), product)
+    return loads if directed else directed_to_link_loads(g, loads)
+
+
+def directed_to_link_loads(g: Graph, directed: np.ndarray) -> np.ndarray:
+    """Fold an (n, n) directed load matrix onto (E,) undirected link loads."""
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    return directed[u, v] + directed[v, u]
+
+
+def link_load_stats(loads: np.ndarray, total_links: int,
+                    prefix: str = "") -> Dict[str, float]:
+    """Summary stats over the used support (loads > 0); see module docstring.
+
+    Keys: ``{prefix}max_link_load``, ``{prefix}mean_link_load``,
+    ``{prefix}p99_link_load``, ``{prefix}load_imbalance``,
+    ``{prefix}links_used`` (+ ``links_total`` when prefix is empty).
+    """
+    used = loads[loads > 0]
+    out: Dict[str, float] = {}
+    if not prefix:
+        out["links_total"] = int(total_links)
+    if used.size == 0:
+        out.update({f"{prefix}max_link_load": 0.0,
+                    f"{prefix}mean_link_load": 0.0,
+                    f"{prefix}p99_link_load": 0.0,
+                    f"{prefix}load_imbalance": 0.0,
+                    f"{prefix}links_used": 0})
+        return out
+    out.update({
+        f"{prefix}max_link_load": float(used.max()),
+        f"{prefix}mean_link_load": float(used.mean()),
+        f"{prefix}p99_link_load": float(np.percentile(used, 99)),
+        f"{prefix}load_imbalance": float(used.max() / used.mean()),
+        f"{prefix}links_used": int(used.size),
+    })
+    return out

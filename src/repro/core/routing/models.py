@@ -1,0 +1,219 @@
+"""Routing models: per-pair next-hop distributions over the shared APSP.
+
+A :class:`RoutingModel` is built from the arrays the `analysis.AnalysisEngine`
+already computed — the (n, n) hop-distance matrix and the exact
+shortest-path multiplicity matrix — and answers two questions, both fully
+vectorized (no per-flow Python loops):
+
+* ``link_loads(demand)``: exact expected per-link load when the whole
+  (n, n) traffic matrix is pushed through the model (via `assign`).
+* ``next_hop_tensor(dests)``: the per-destination next-hop probability
+  matrices ``P[t][u, v]`` — row-stochastic on every reachable (u, t) pair —
+  for models with a Markovian per-hop description.
+
+Shipped models (the FatPaths/multipathing comparison set):
+
+* :class:`UniformShortest` — exact ECMP: flows spread uniformly over *all*
+  shortest paths. Next hops weight neighbours by downstream multiplicity
+  (``P_t[u, v] = sigma(v, t) / sigma(u, t)`` on the frontier), which is
+  precisely the Markov chain whose path law is uniform over shortest paths.
+* :class:`ValiantVLB` — Valiant load balancing: route via a uniformly
+  random intermediate router in two minimal stages. Reduces to ECMP on two
+  derived demand matrices, so it reuses the same assignment engine.
+* :class:`SlackRouting` — slack-limited non-minimal routing: spread each
+  flow over the path classes at 0..k extra hops, class-weighted by the
+  exact simple-path counts from `analysis.paths.path_counts_with_slack`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from ..graph import Graph
+from .assign import (demand_matrix, directed_to_link_loads, ecmp_link_loads,
+                     walk_slack_link_loads)
+
+__all__ = ["RoutingModel", "UniformShortest", "ValiantVLB", "SlackRouting",
+           "MODELS", "make_model"]
+
+
+class RoutingModel:
+    """Common interface: (g, dist, mult) -> loads / next-hop tensors."""
+
+    name = "abstract"
+
+    def __init__(self, g: Graph, dist: np.ndarray, mult: np.ndarray,
+                 use_kernel: bool = True):
+        self.g = g
+        self.dist = np.asarray(dist)
+        self.mult = np.asarray(mult)
+        self.use_kernel = use_kernel
+
+    @classmethod
+    def from_engine(cls, engine, **kwargs) -> "RoutingModel":
+        """Build from an `AnalysisEngine`, sharing its APSP/multiplicities."""
+        kwargs.setdefault("use_kernel", engine.use_kernel)
+        return cls(engine.g, engine.distances(),
+                   engine.multiplicities()["multiplicity"], **kwargs)
+
+    # -- required API ------------------------------------------------------
+
+    def directed_link_loads(self, demand: np.ndarray) -> np.ndarray:
+        """(n, n) expected directed edge loads for the demand matrix."""
+        raise NotImplementedError
+
+    def link_loads(self, demand: np.ndarray) -> np.ndarray:
+        """(E,) expected undirected link loads (both orientations summed)."""
+        return directed_to_link_loads(self.g,
+                                      self.directed_link_loads(demand))
+
+    def average_hops(self, demand: np.ndarray) -> float:
+        """Expected hops per unit of routed demand (total load / demand)."""
+        routed = self._routed_demand(demand)
+        if routed <= 0:
+            return 0.0
+        return float(self.directed_link_loads(demand).sum() / routed)
+
+    def _routed_demand(self, demand: np.ndarray) -> float:
+        ok = np.isfinite(self.dist) & (self.dist > 0)
+        return float(np.where(ok, demand, 0.0).sum())
+
+    # -- optional API ------------------------------------------------------
+
+    def next_hop_tensor(self, dests: Optional[Sequence[int]] = None
+                        ) -> np.ndarray:
+        """(T, n, n) next-hop probabilities; not every model is Markovian."""
+        raise NotImplementedError(f"{self.name} has no per-hop description")
+
+
+class UniformShortest(RoutingModel):
+    """Exact ECMP: uniform over all shortest paths (multiplicity-weighted)."""
+
+    name = "uniform_shortest"
+
+    def directed_link_loads(self, demand: np.ndarray) -> np.ndarray:
+        return ecmp_link_loads(self.g, self.dist, self.mult, demand,
+                               use_kernel=self.use_kernel, directed=True)
+
+    def next_hop_tensor(self, dests: Optional[Sequence[int]] = None
+                        ) -> np.ndarray:
+        """P[t][u, v] = A[u,v] * [d(v,t) = d(u,t) - 1] * sigma(v,t)/sigma(u,t).
+
+        Row-stochastic on every (u, t) with 0 < d(u, t) < inf (Brandes'
+        identity: frontier multiplicities sum to sigma(u, t)); zero rows at
+        u = t and on unreachable pairs.
+        """
+        n = self.g.n
+        dests = np.arange(n) if dests is None else np.asarray(dests)
+        adj = self.g.adjacency_dense(np.float64)
+        d, m = self.dist, self.mult
+        # (T, n, n): frontier mask per destination, multiplicity weighted
+        dcol = d[:, dests].T          # (T, n); dcol[t, u] = d(u, t)
+        mcol = m[:, dests].T          # (T, n)
+        frontier = (dcol[:, None, :] == dcol[:, :, None] - 1) & (adj > 0)[None]
+        weights = np.where(frontier, mcol[:, None, :], 0.0)
+        denom = np.where(mcol > 0, mcol, 1.0)[:, :, None]
+        return weights / denom
+
+
+class ValiantVLB(RoutingModel):
+    """Valiant load balancing: two minimal stages via a random intermediate.
+
+    Each unit of (s, t) demand is split uniformly over all n intermediate
+    routers w and shipped s -> w -> t, each leg on uniform-shortest-path
+    (ECMP) routing. Legs with w = s or w = t are the degenerate zero-length
+    leg plus one minimal leg, matching the classic VLB description. Expected
+    loads are therefore ECMP loads of two derived demand matrices:
+    ``T1[s, w] = rowsum(T)[s] / n`` and ``T2[w, t] = colsum(T)[t] / n``.
+    """
+
+    name = "valiant"
+
+    def __init__(self, g: Graph, dist: np.ndarray, mult: np.ndarray,
+                 use_kernel: bool = True):
+        super().__init__(g, dist, mult, use_kernel)
+        self.minimal = UniformShortest(g, dist, mult, use_kernel)
+
+    def _legs(self, demand: np.ndarray):
+        n = self.g.n
+        ok = np.isfinite(self.dist) & (self.dist > 0)
+        dem = np.where(ok, demand, 0.0)
+        leg1 = np.repeat(dem.sum(axis=1, keepdims=True) / n, n, axis=1)
+        leg2 = np.repeat(dem.sum(axis=0, keepdims=True) / n, n, axis=0)
+        return leg1, leg2
+
+    def directed_link_loads(self, demand: np.ndarray) -> np.ndarray:
+        leg1, leg2 = self._legs(demand)
+        return (self.minimal.directed_link_loads(leg1)
+                + self.minimal.directed_link_loads(leg2))
+
+    def next_hop_tensor(self, dests: Optional[Sequence[int]] = None
+                        ) -> np.ndarray:
+        """Per-leg next hops: each VLB stage is minimal toward its target."""
+        return self.minimal.next_hop_tensor(dests)
+
+
+class SlackRouting(RoutingModel):
+    """Non-minimal routing over path classes with <= ``slack`` extra hops.
+
+    Each (s, t) flow picks slack class j (0 <= j <= slack) with probability
+    proportional to the *exact* simple-path count of that class
+    (`analysis.paths.path_counts_with_slack`), then spreads uniformly over
+    the class. Classes 0 and 1 are exact (length-d and length-d+1 walks are
+    precisely the simple paths); class 2 spreads over length-d+2 walks,
+    which include one-bounce detours — the documented walk relaxation.
+    """
+
+    name = "slack"
+
+    def __init__(self, g: Graph, dist: np.ndarray, mult: np.ndarray,
+                 use_kernel: bool = True, slack: int = 1,
+                 path_counts: Optional[Dict[str, np.ndarray]] = None):
+        super().__init__(g, dist, mult, use_kernel)
+        if not 0 <= slack <= 2:
+            raise ValueError(f"slack must be 0..2, got {slack}")
+        self.slack = slack
+        if path_counts is None:
+            from ..analysis.paths import path_counts_with_slack
+
+            path_counts = path_counts_with_slack(g, self.dist,
+                                                 use_kernel=use_kernel)
+        self.path_counts = path_counts
+
+    @classmethod
+    def from_engine(cls, engine, **kwargs) -> "SlackRouting":
+        kwargs.setdefault("path_counts", engine.multiplicities())
+        return super().from_engine(engine, **kwargs)
+
+    def class_probabilities(self) -> np.ndarray:
+        """(slack+1, n, n) per-pair class probabilities (sum to 1)."""
+        keys = ["multiplicity", "plus1", "plus2"][: self.slack + 1]
+        counts = np.stack([np.asarray(self.path_counts[k], np.float64)
+                           for k in keys])
+        off = np.isfinite(self.dist) & (self.dist > 0)
+        counts *= off[None]
+        total = counts.sum(axis=0)
+        return np.where(total > 0, counts / np.where(total > 0, total, 1.0),
+                        0.0)
+
+    def directed_link_loads(self, demand: np.ndarray) -> np.ndarray:
+        probs = self.class_probabilities()
+        return walk_slack_link_loads(self.g, self.dist, demand, self.slack,
+                                     list(probs), use_kernel=self.use_kernel,
+                                     directed=True)
+
+
+MODELS: Dict[str, type] = {
+    UniformShortest.name: UniformShortest,
+    ValiantVLB.name: ValiantVLB,
+    SlackRouting.name: SlackRouting,
+}
+
+
+def make_model(name: str, engine, **kwargs) -> RoutingModel:
+    """Instantiate a registered model from an `AnalysisEngine`."""
+    if name not in MODELS:
+        raise KeyError(f"unknown routing model {name!r}; known: "
+                       f"{sorted(MODELS)}")
+    return MODELS[name].from_engine(engine, **kwargs)

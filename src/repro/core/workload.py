@@ -2,10 +2,12 @@
 
 Traffic matrices over routers (servers implicit): permutation (all flows of a
 server share a destination — the load-balancing stress case), uniform random,
-and skewed (zipf) patterns. `evaluate_workload` routes sampled flows over
-shortest paths and reports link-load statistics — the EvalNet analogue of
-comparing topologies under load, and the input signal for
-`collectives.mapping` traffic mixes.
+and skewed (zipf) patterns. `evaluate_workload` is a thin wrapper over the
+`routing` subsystem: sampled flows are routed with one vectorized batched
+path chase (no per-flow Python loop), expected loads come from
+`routing.assign.ecmp_link_loads`, and both reports share the single
+link-load convention documented in `routing.assign` (undirected links in
+``g.edges`` order; statistics over the used support).
 """
 from __future__ import annotations
 
@@ -15,10 +17,11 @@ from typing import Dict, Optional
 import numpy as np
 
 from .graph import Graph
-from .analysis.apsp import apsp_dense, bfs_distances
+from .analysis.apsp import apsp_dense
+from .routing import assign as _assign
 
 __all__ = ["Workload", "make_traffic", "evaluate_workload",
-           "expected_link_loads"]
+           "expected_link_loads", "sample_flow_link_loads"]
 
 
 @dataclasses.dataclass
@@ -28,6 +31,10 @@ class Workload:
     pairs: np.ndarray
     volume: float = 1.0
     name: str = "workload"
+
+    def demand_matrix(self, g: Graph) -> np.ndarray:
+        """(n, n) demand matrix for the routing subsystem."""
+        return _assign.demand_matrix(g, self.pairs, self.volume)
 
 
 def make_traffic(g: Graph, pattern: str = "permutation", flows: int = 4096,
@@ -54,106 +61,114 @@ def make_traffic(g: Graph, pattern: str = "permutation", flows: int = 4096,
                     name=f"{pattern}(flows={flows})")
 
 
-def _route_next_hops(g: Graph, dist: np.ndarray, src: int, dst: int,
-                     rng: np.random.Generator) -> list:
-    """Random shortest path src->dst using the distance matrix as oracle."""
-    indptr, indices = g.csr()
-    path = [src]
-    u = src
-    guard = 0
-    while u != dst:
-        nbrs = indices[indptr[u]:indptr[u + 1]]
-        good = nbrs[dist[nbrs, dst] == dist[u, dst] - 1]
-        u = int(rng.choice(good))
-        path.append(u)
-        guard += 1
-        if guard > g.n:
-            raise RuntimeError("routing loop; distance matrix inconsistent")
-    return path
+def sample_flow_link_loads(
+        g: Graph, dist: np.ndarray, pairs: np.ndarray,
+        rng: np.random.Generator, mult: Optional[np.ndarray] = None,
+        chunk: int = 65536):
+    """Sample one shortest path per flow, batched over all flows at once.
+
+    Per hop, every active flow draws a next hop among the neighbours on the
+    shortest-path frontier (``d(v, t) = d(u, t) - 1``) — weighted by the
+    downstream multiplicity ``sigma(v, t)`` when ``mult`` is given, so the
+    sampled path is uniform over *all* shortest paths and the loads are an
+    unbiased estimate of `routing.assign.ecmp_link_loads`; unweighted
+    (uniform next hop, the legacy sampler) otherwise.
+
+    Returns ``(loads, hops)``: (E,) undirected link loads in ``g.edges``
+    order and the total hop count. The per-hop working set is
+    (flows, max_degree) — padded CSR neighbour lists, not dense rows — so a
+    hop costs k * maxdeg gathers regardless of n. O(diameter) numpy steps
+    per chunk.
+    """
+    n = g.n
+    dist = np.asarray(dist, np.float32)
+    if mult is not None:
+        mult = np.asarray(mult, np.float32)
+    nbrs, valid, eids = _assign.padded_neighbors(g, with_edge_ids=True)
+    dloads = np.zeros(2 * g.num_edges, np.float64)  # per directed edge
+    hops = 0
+    for lo in range(0, len(pairs), chunk):
+        cur = np.asarray(pairs[lo:lo + chunk, 0], np.int64).copy()
+        dst = np.asarray(pairs[lo:lo + chunk, 1], np.int64)
+        ok = (cur != dst) & np.isfinite(dist[cur, dst])
+        cur, dst = cur[ok], dst[ok]
+        idx = np.arange(len(cur))
+        guard = 0
+        while len(idx):
+            c, t = cur[idx], dst[idx]
+            nb = nbrs[c]                                     # (k, maxdeg)
+            front = valid[c] & (dist[nb, t[:, None]] ==
+                                dist[c, t][:, None] - 1)
+            w = np.where(front, mult[nb, t[:, None]], np.float32(0)) \
+                if mult is not None else front.astype(np.float32)
+            slot = _assign.sample_columns(w, front, rng)
+            rows = np.arange(len(c))
+            nxt = nb[rows, slot]
+            np.add.at(dloads, eids[c, slot], 1.0)
+            hops += len(c)
+            cur[idx] = nxt
+            idx = idx[nxt != t]
+            guard += 1
+            if guard > n + 1:
+                raise RuntimeError(
+                    "routing loop; distance matrix inconsistent")
+    e = g.num_edges
+    return dloads[:e] + dloads[e:], hops
 
 
 def expected_link_loads(g: Graph, wl: Workload, dist: np.ndarray,
                         mult: np.ndarray) -> np.ndarray:
-    """Exact expected per-link load under uniform-random shortest-path routing.
-
-    A flow (s, t) crosses link {u, v} with probability
-    ``(sigma(s,u) * sigma(v,t) + sigma(s,v) * sigma(u,t)) / sigma(s,t)``
-    (each orientation term zero unless the link lies on a shortest path).
-    Unlike the sampled routing in `evaluate_workload`, this is the
-    expectation over *all* shortest paths — the multiplicity matrix from
-    `analysis.paths` is what makes it exact.
-    """
-    from .analysis.paths import pair_edge_loads
-
-    loads = np.zeros(g.num_edges, dtype=np.float64)
-    # batch flows in chunks: each chunk broadcasts (chunk, E) gathers (full
-    # fan-out would allocate flows x edges temporaries)
-    chunk = max(1, int(2 ** 22 // max(1, g.num_edges)))
-    for lo in range(0, len(wl.pairs), chunk):
-        s = wl.pairs[lo:lo + chunk, 0]
-        t = wl.pairs[lo:lo + chunk, 1]
-        total = mult[s, t]
-        valid = np.isfinite(dist[s, t]) & (total > 0)
-        if not valid.any():
-            continue
-        s, t, total = s[valid], t[valid], total[valid]
-        per_flow = pair_edge_loads(g, dist, mult, s, t)
-        loads += (per_flow / total[:, None]).sum(axis=0)
-    return loads
+    """Exact expected per-link load under uniform-over-all-shortest-paths
+    (ECMP) routing — delegates to `routing.assign.ecmp_link_loads` (the
+    vectorized level-decomposition engine; f64 path for exactness)."""
+    return _assign.ecmp_link_loads(g, dist, mult, wl.demand_matrix(g),
+                                   use_kernel=False)
 
 
 def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
-                      seed: int = 0, mult: Optional[np.ndarray] = None) -> Dict:
-    """Route every flow on a random shortest path; report link loads.
+                      seed: int = 0, mult: Optional[np.ndarray] = None,
+                      model=None) -> Dict:
+    """Route every flow on a sampled shortest path; report link loads.
 
     max_link_load (flows across the most loaded link, normalized by the mean)
-    approximates the inverse saturation throughput of the pattern. When a
+    approximates the inverse saturation throughput of the pattern. When the
     shortest-path multiplicity matrix ``mult`` is supplied (from
-    `analysis.paths.shortest_path_multiplicity`), the report also carries
-    the expected link loads under uniform-over-all-shortest-paths routing.
-    NB the two routing models differ: the sampler below draws a uniform
-    next hop at each branch (biasing toward low-branching paths), while
-    the expectation weights every shortest path equally — compare the two
-    max loads as alternative routing policies, not estimator vs estimand.
+    `analysis.paths`), the sampler weights next hops by downstream
+    multiplicity — i.e. it samples uniform-over-all-shortest-paths — and the
+    report also carries the exact expected loads of that same routing model
+    (``expected_*`` keys), so sampled is estimator and expected is estimand.
+    Without ``mult`` the sampler falls back to uniform next hops (biased
+    toward low-branching paths; no expected report).
+
+    Both reports use the one link-load convention from `routing.assign`:
+    undirected links, statistics over the used support. Passing a
+    `routing.RoutingModel` as ``model`` swaps the expected-load side for
+    that model (e.g. Valiant or slack routing).
     """
     if dist is None:
         dist = apsp_dense(g)
     rng = np.random.default_rng(seed)
-    loads: Dict = {}
-    hop_total = 0
-    for src, dst in wl.pairs:
-        path = _route_next_hops(g, dist, int(src), int(dst), rng)
-        hop_total += len(path) - 1
-        for a, b in zip(path[:-1], path[1:]):
-            key = (a, b) if a < b else (b, a)
-            loads[key] = loads.get(key, 0) + 1
-    if not loads:
+    pairs = wl.pairs
+    if len(pairs) == 0:
         return {"flows": 0}
-    vals = np.array(list(loads.values()), dtype=np.float64)
-    rep = {}
-    if mult is not None:
-        exp = expected_link_loads(g, wl, dist, mult)
-        used = exp[exp > 0]
-        # NB: expected_load_imbalance normalizes by the mean over the full
-        # shortest-path *support* (every link any shortest path touches),
-        # while load_imbalance's mean is over the links one sampled routing
-        # happened to use — compare the max_* keys across the two models,
-        # not the imbalance ratios.
-        rep.update({
-            "max_expected_link_load": float(exp.max()),
-            "expected_load_imbalance": float(exp.max() / used.mean())
-            if used.size else 0.0,
-        })
-    rep.update({
+    loads, hop_total = sample_flow_link_loads(g, dist, pairs, rng, mult=mult)
+    loads = loads * wl.volume  # same units as the expected (demand) side
+    rep: Dict = {
         "workload": wl.name,
         "topology": g.name,
-        "flows": int(len(wl.pairs)),
-        "avg_hops": hop_total / len(wl.pairs),
-        "links_used": int(len(vals)),
-        "links_total": g.num_edges,
-        "max_link_load": float(vals.max()),
-        "mean_link_load": float(vals.mean()),
-        "p99_link_load": float(np.percentile(vals, 99)),
-        "load_imbalance": float(vals.max() / vals.mean()),
-    })
+        "flows": int(len(pairs)),
+        "avg_hops": hop_total / len(pairs),
+    }
+    rep.update(_assign.link_load_stats(loads, g.num_edges))
+    if model is not None or mult is not None:
+        demand = wl.demand_matrix(g)
+        if model is not None:
+            exp = model.link_loads(demand)
+        else:
+            exp = _assign.ecmp_link_loads(g, dist, mult, demand,
+                                          use_kernel=False)
+        rep.update(_assign.link_load_stats(exp, g.num_edges,
+                                           prefix="expected_"))
+        # legacy key: max_expected_link_load == expected_max_link_load
+        rep["max_expected_link_load"] = rep["expected_max_link_load"]
     return rep

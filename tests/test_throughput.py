@@ -1,0 +1,205 @@
+"""Max-concurrent-flow vs closed-form and LP oracles on known graphs."""
+import numpy as np
+import pytest
+
+from repro.core import routing as R, topology as T
+from repro.core.analysis import AnalysisEngine, apsp_dense
+from repro.core.graph import Graph
+
+EPS = 0.05
+
+
+def _ring(n):
+    return Graph(n=n, edges=np.array([(i, (i + 1) % n) for i in range(n)]),
+                 name=f"C{n}")
+
+
+def _complete(n):
+    return Graph(n=n, edges=np.array(
+        [(i, j) for i in range(n) for j in range(i + 1, n)]), name=f"K{n}")
+
+
+def _star(leaves):
+    return Graph(n=leaves + 1,
+                 edges=np.array([(0, i + 1) for i in range(leaves)]),
+                 name=f"star{leaves}")
+
+
+def _solve(g, demand=None, eps=EPS, **kw):
+    dist = apsp_dense(g, use_kernel=False)
+    if demand is None:
+        demand = R.concurrent_flow_demand(g, dist, "all-pairs")
+    kw.setdefault("use_kernel", False)
+    kw.setdefault("max_rounds", 400)
+    return R.max_concurrent_flow(g, demand, eps=eps, **kw)
+
+
+def lp_max_concurrent_flow(g: Graph, demand: np.ndarray) -> float:
+    """Brute-force oracle: the exact max-concurrent-flow LP (scipy HiGHS),
+    source-aggregated (one flow variable per source and directed edge)."""
+    sp = pytest.importorskip("scipy.sparse")
+    linprog = pytest.importorskip("scipy.optimize").linprog
+
+    n = g.n
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u])
+    m = len(src)
+    sources = np.flatnonzero(demand.sum(axis=1) > 0)
+    S = len(sources)
+    nvar = S * m + 1  # [flows, lambda]
+
+    rows, cols, vals = [], [], []
+    b_eq = []
+    r = 0
+    for si, s in enumerate(sources):
+        for node in range(n):
+            out_e = np.flatnonzero(src == node)
+            in_e = np.flatnonzero(dst == node)
+            rows += [r] * (len(out_e) + len(in_e))
+            cols += list(si * m + out_e) + list(si * m + in_e)
+            vals += [1.0] * len(out_e) + [-1.0] * len(in_e)
+            # divergence = lambda * (total supply at s if node==s else -d[s,node])
+            rhs = demand[s].sum() if node == s else -demand[s, node]
+            rows.append(r)
+            cols.append(S * m)
+            vals.append(-rhs)
+            b_eq.append(0.0)
+            r += 1
+    a_eq = sp.coo_matrix((vals, (rows, cols)), shape=(r, nvar))
+    # capacity: sum over sources of f_{s,e} <= 1
+    rows_u, cols_u = [], []
+    for si in range(S):
+        rows_u += list(range(m))
+        cols_u += list(si * m + np.arange(m))
+    a_ub = sp.coo_matrix((np.ones(len(rows_u)), (rows_u, cols_u)),
+                         shape=(m, nvar))
+    c = np.zeros(nvar)
+    c[-1] = -1.0
+    res = linprog(c, A_ub=a_ub, b_ub=np.ones(m), A_eq=a_eq,
+                  b_eq=np.array(b_eq), bounds=[(0, None)] * nvar,
+                  method="highs")
+    assert res.status == 0, res.message
+    return float(-res.fun)
+
+
+# -- closed-form oracles (edge-transitive graphs, uniform demand) -------------
+
+CLOSED_FORM = [(_ring(8), 1 / 8), (_complete(5), 1.0),
+               (T.make("hypercube", dim=3), 1 / 4), (_star(4), 1 / 4)]
+
+
+@pytest.mark.parametrize("g,opt", CLOSED_FORM, ids=lambda x: getattr(x, "name", x))
+def test_matches_closed_form_within_eps(g, opt):
+    res = _solve(g)
+    # certified bounds must bracket the optimum...
+    assert res["throughput"] <= opt * (1 + 1e-9)
+    assert res["upper_bound"] >= opt * (1 - 1e-9)
+    # ...and close to within the MWU (1+eps) guarantee
+    assert res["converged"], res
+    assert res["gap"] <= 1 + EPS + 1e-9
+    assert res["throughput"] >= opt / (1 + EPS) * (1 - 1e-9)
+
+
+@pytest.mark.parametrize("g", [
+    T.make("torus", dims=(3, 3)),
+    T.make("jellyfish", n=10, r=3, seed=2),
+    _star(5),
+], ids=lambda g: g.name)
+def test_matches_lp_oracle_within_eps(g):
+    dist = apsp_dense(g, use_kernel=False)
+    demand = R.concurrent_flow_demand(g, dist, "all-pairs")
+    opt = lp_max_concurrent_flow(g, demand)
+    res = _solve(g, demand)
+    assert res["throughput"] <= opt * (1 + 1e-6)
+    assert res["upper_bound"] >= opt * (1 - 1e-6)
+    assert res["converged"] and res["gap"] <= 1 + EPS + 1e-9
+    assert res["throughput"] >= opt / (1 + EPS) * (1 - 1e-6)
+
+
+def test_lower_bound_flow_is_feasible():
+    """The reported link loads at lambda = throughput respect capacities."""
+    g = T.make("torus", dims=(3, 3))
+    res = _solve(g)
+    # undirected loads sum both directions; per-direction capacity is 1.0
+    assert res["link_loads"].max() <= 2.0 + 1e-9
+    assert res["link_loads"].shape == (g.num_edges,)
+
+
+def test_kernel_and_numpy_oracles_agree():
+    g = _ring(6)
+    a = _solve(g, use_kernel=False, seed=7)
+    b = _solve(g, use_kernel=True, seed=7)
+    assert a["throughput"] == pytest.approx(b["throughput"], rel=1e-5)
+    assert a["upper_bound"] == pytest.approx(b["upper_bound"], rel=1e-5)
+
+
+def test_permutation_demand_and_unreachable_drop():
+    g = Graph(n=6, edges=np.array([(0, 1), (1, 2), (3, 4), (4, 5)]),
+              name="two-paths")
+    dist = apsp_dense(g, use_kernel=False)
+    demand = np.zeros((6, 6))
+    demand[0, 2] = demand[0, 3] = 1.0  # (0,3) is unreachable
+    res = R.max_concurrent_flow(g, demand, eps=0.2, use_kernel=False)
+    assert res["dropped_unreachable"] == 1
+    assert res["commodities"] == 1
+    assert res["throughput"] == pytest.approx(1.0)  # lone path, unit caps
+
+    perm = R.concurrent_flow_demand(g, dist, "permutation", seed=1)
+    assert perm.sum() > 0 and np.diagonal(perm).sum() == 0
+
+
+def test_degenerate_demands_raise():
+    g = _ring(4)
+    with pytest.raises(ValueError):
+        R.max_concurrent_flow(g, np.zeros((4, 4)), use_kernel=False)
+    with pytest.raises(ValueError):
+        R.max_concurrent_flow(g, np.eye(4), use_kernel=False)
+    with pytest.raises(ValueError):
+        R.max_concurrent_flow(g, np.ones((3, 3)), use_kernel=False)
+
+
+def test_greedy_router_conserves_demand_hops():
+    g = T.make("torus", dims=(3, 3))
+    dist = apsp_dense(g, use_kernel=False)
+    lm = g.distance_seed()
+    pairs = np.array([(s, t) for s in range(g.n) for t in range(g.n)
+                      if s != t])
+    amounts = np.ones(len(pairs))
+    loads = R.route_greedy_shortest(g, lm, dist, pairs, amounts,
+                                    np.random.default_rng(0))
+    # unit lengths: every commodity walks exactly dist hops
+    assert loads.sum() == pytest.approx(dist[pairs[:, 0], pairs[:, 1]].sum())
+
+
+def test_engine_throughput_stage_report():
+    g = T.make("slimfly", q=5)
+    eng = AnalysisEngine(g, use_kernel=False, throughput_eps=0.25)
+    rep = eng.report(stages=("throughput",))
+    for key in ("saturation_throughput", "throughput_upper_bound",
+                "throughput_gap", "aggregate_throughput",
+                "throughput_rounds", "throughput_converged",
+                "throughput_demand"):
+        assert key in rep, key
+    assert rep["throughput_demand"] == "all-pairs"
+    assert 0 < rep["saturation_throughput"] <= rep["throughput_upper_bound"]
+    # stage result is cached on the engine
+    assert eng.throughput() is eng.throughput()
+    # default report() leaves the expensive stage out
+    assert "saturation_throughput" not in eng.report()
+
+
+def test_engine_throughput_raises_in_sampled_mode():
+    g = T.make("slimfly", q=5)
+    eng = AnalysisEngine(g, dense_limit=10)  # force sampled mode
+    with pytest.raises(ValueError, match="dense APSP"):
+        eng.report(stages=("throughput",))
+
+
+def test_engine_throughput_matches_direct_call():
+    g = T.make("hypercube", dim=3)
+    eng = AnalysisEngine(g, use_kernel=False, throughput_eps=0.1,
+                         throughput_rounds=200)
+    rep = eng.report(stages=("throughput",))
+    assert rep["saturation_throughput"] >= 0.25 / 1.1 * (1 - 1e-9)
+    assert rep["throughput_upper_bound"] >= 0.25 * (1 - 1e-9)

@@ -1,0 +1,87 @@
+"""Generator invariant suite: degree sequence, connectivity, and the
+`meta`-declared diameter checked against BFS ground truth for every family
+(satellite of the routing PR: routing correctness rests on these graphs
+being what their generators claim)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.analysis import bfs_distances
+
+
+def _bfs_diameter(g):
+    d = bfs_distances(g, np.arange(g.n))
+    assert (d >= 0).all(), "graph must be connected for a finite diameter"
+    return int(d.max())
+
+
+# family -> (params, expected degree multiset builder)
+CASES = {
+    "slimfly": dict(q=5),
+    "dragonfly": dict(h=2),
+    "hyperx": dict(dims=(3, 4)),
+    "fattree": dict(k=4),
+    "torus": dict(dims=(3, 4)),
+    "xpander": dict(r=6, lifts=3),
+    "jellyfish": dict(n=24, r=5, seed=1),
+}
+
+
+def _expected_degrees(fam, params, g):
+    """Closed-form degree sequence per generator family."""
+    if fam == "slimfly":
+        q = params["q"]
+        return np.full(g.n, (3 * q - 1) // 2)
+    if fam == "dragonfly":
+        h = params["h"]
+        return np.full(g.n, 2 * h - 1 + h)
+    if fam == "hyperx":
+        return np.full(g.n, sum(d - 1 for d in params["dims"]))
+    if fam == "fattree":
+        k = params["k"]
+        seq = ([k] * ((k // 2) ** 2)       # core: one agg per pod
+               + [k] * (k * k // 2)        # agg: k/2 core + k/2 edge
+               + [k // 2] * (k * k // 2))  # edge: k/2 agg (servers implicit)
+        return np.array(sorted(seq))
+    if fam == "torus":
+        return np.full(g.n, 2 * len(params["dims"]))
+    if fam == "xpander":
+        return np.full(g.n, params["r"])
+    if fam == "jellyfish":
+        return np.full(g.n, params["r"])
+    raise AssertionError(fam)
+
+
+@pytest.mark.parametrize("fam", sorted(CASES))
+def test_generator_invariants(fam):
+    params = CASES[fam]
+    g = T.make(fam, **params)
+    # connectivity (both the cheap check and BFS agree)
+    assert g.is_connected()
+    # degree sequence matches the closed form
+    np.testing.assert_array_equal(np.sort(g.degrees()),
+                                  np.sort(_expected_degrees(fam, params, g)))
+    # meta-declared diameter, where the generator declares one, must equal
+    # the BFS ground truth
+    bfs_diam = _bfs_diameter(g)
+    if "diameter" in g.meta:
+        assert g.meta["diameter"] == bfs_diam, (
+            f"{fam}: meta diameter {g.meta['diameter']} != BFS {bfs_diam}")
+    else:
+        assert fam in ("xpander", "jellyfish"), (
+            f"{fam} should declare its diameter in meta")
+
+
+@pytest.mark.parametrize("fam", sorted(CASES))
+def test_generator_edges_canonical(fam):
+    g = T.make(fam, **CASES[fam])
+    e = g.edges
+    assert (e[:, 0] < e[:, 1]).all(), "edges must be canonicalized u < v"
+    assert len(np.unique(e, axis=0)) == len(e), "no duplicate links"
+
+
+def test_hypercube_invariants():
+    g = T.make("hypercube", dim=4)
+    assert g.is_connected()
+    assert (g.degrees() == 4).all()
+    assert _bfs_diameter(g) == g.meta["diameter"] == 4
