@@ -80,6 +80,35 @@ def run(quick: bool = False) -> List[dict]:
         "commodities": tp["commodities"],
     })
 
+    # batched equal-cost sweep vs looping analyze() on identical instances
+    # (acceptance: the stacked-leading-axis kernel path amortizes tracing
+    # and computes only the comparison columns -> >= 2x over the loop)
+    from repro.core import sweep as S
+
+    sweep_graphs = ([T.make("slimfly", q=13), T.make("polarfly", q=17)]
+                    if quick else
+                    [T.make("polarfly", q=31),
+                     T.make("jellyfish", n=1024, r=16, concentration=8)])
+    t0 = time.time()
+    swept = S.sweep(graphs=sweep_graphs, budget=0.0)
+    t_batch = time.time() - t0
+    t0 = time.time()
+    for g in sweep_graphs:
+        AnalysisEngine(g).report()
+    t_loop = time.time() - t0
+    rows.append({
+        "family": "sweep-vs-loop ("
+                  + ",".join(g.name for g in sweep_graphs) + ")",
+        "routers": max(g.n for g in sweep_graphs),
+        "servers": sum(g.num_servers for g in sweep_graphs),
+        "sweep_batched_s": round(t_batch, 2),
+        "analyze_loop_s": round(t_loop, 2),
+        "sweep_speedup": round(t_loop / t_batch, 2),
+        "sweep_rows": [
+            {k: r[k] for k in ("family", "diameter", "mult_mean", "tput_lb")}
+            for r in swept["rows"]],
+    })
+
     # million-server sampled mode
     if not quick:
         g = T.by_servers("jellyfish", 1_000_000)

@@ -1,9 +1,12 @@
 """Benchmark 1 (Table-1 analogue): topology generation scalability.
 
 Generates every family at ~10k / ~100k / ~1M servers and reports wall time,
-router/edge counts, and generator memory (edge-array bytes). The EvalNet
-claim under test: million-server interconnects are generated in seconds on
-one machine because servers are implicit.
+router/edge counts, generator memory (edge-array bytes), and the sizing
+error against the target. The EvalNet claims under test: million-server
+interconnects are generated in seconds on one machine because servers are
+implicit, and the spec-driven ladder sizers land every family within 10%
+of the 1M-server target (asserted — this is the sizing contract the
+equal-cost sweep relies on).
 """
 from __future__ import annotations
 
@@ -13,6 +16,9 @@ from typing import List
 from repro.core import topology as T
 
 SIZES = [10_000, 100_000, 1_000_000]
+#: sizing contract at the largest target (quantized ladders — hypercube's
+#: powers of two, xpander's 2-lifts — stay inside this at the 1M point)
+SIZING_TOLERANCE = 0.10
 
 
 def run(quick: bool = False) -> List[dict]:
@@ -23,25 +29,34 @@ def run(quick: bool = False) -> List[dict]:
             t0 = time.time()
             g = T.by_servers(fam, target)
             dt = time.time() - t0
+            err = abs(g.num_servers - target) / target
             rows.append({
                 "family": fam,
                 "target_servers": target,
                 "servers": g.num_servers,
+                "sizing_error": round(err, 4),
                 "routers": g.n,
                 "edges": g.num_edges,
                 "gen_seconds": round(dt, 3),
                 "edge_mem_mb": round(g.edges.nbytes / 2**20, 1),
             })
+            if target == SIZES[-1]:
+                assert err <= SIZING_TOLERANCE, (
+                    f"{fam}: sizer landed {g.num_servers} servers for the "
+                    f"{target} target ({err:.1%} off, contract is "
+                    f"{SIZING_TOLERANCE:.0%})")
     return rows
 
 
 def main(quick: bool = False):
     rows = run(quick)
-    hdr = f"{'family':<11}{'target':>9}{'servers':>10}{'routers':>9}{'edges':>10}{'sec':>8}{'MB':>7}"
+    hdr = (f"{'family':<12}{'target':>9}{'servers':>10}{'err%':>6}"
+           f"{'routers':>9}{'edges':>10}{'sec':>8}{'MB':>7}")
     print(hdr)
     print("-" * len(hdr))
     for r in rows:
-        print(f"{r['family']:<11}{r['target_servers']:>9}{r['servers']:>10}"
+        print(f"{r['family']:<12}{r['target_servers']:>9}{r['servers']:>10}"
+              f"{100 * r['sizing_error']:>6.1f}"
               f"{r['routers']:>9}{r['edges']:>10}{r['gen_seconds']:>8.2f}"
               f"{r['edge_mem_mb']:>7.1f}")
     return rows

@@ -1,22 +1,83 @@
 """EvalNet end-to-end: generate -> analyze -> route traffic -> pick mesh map.
 
-Compares the assigned low-diameter families at a matched ~10k-server cost
-point (the Fig-1-style comparison) — including the paper's path-diversity
-columns (exact shortest-path multiplicity, non-minimal counts at +1/+2
-slack) and the routing subsystem's view: exact expected max link load under
-three routing models (ECMP over all shortest paths, Valiant, slack-1
-non-minimal), per-pair saturation throughput for two families, and the
-collective-planner view of the production TPU fabric.
+Default walkthrough: compares the assigned low-diameter families at a
+matched ~10k-server cost point (the Fig-1-style comparison) — including the
+paper's path-diversity columns (exact shortest-path multiplicity,
+non-minimal counts at +1/+2 slack) and the routing subsystem's view: exact
+expected max link load under three routing models (ECMP over all shortest
+paths, Valiant, slack-1 non-minimal), per-pair saturation throughput for
+two families, and the collective-planner view of the production TPU fabric.
 
   PYTHONPATH=src python examples/topology_analysis.py
+
+``--sweep`` instead runs the spec-driven *equal-cost* comparison: every
+registered family (PolarFly, OFT, Megafly, HammingMesh included) sized to
+one construction-cost budget via `topology.by_cost`, batched through the
+stacked semiring kernels by `core.sweep`, printed as the paper-style table
+(diameter, avg shortest-path length, multiplicity, ECMP saturation-
+throughput lower bound, cost, power) — then a timing section comparing the
+batched sweep against looping ``analyze()`` per topology at ~1024 routers.
+
+  PYTHONPATH=src python examples/topology_analysis.py --sweep
 """
+import sys
+
+FAMILIES = ["slimfly", "jellyfish", "xpander", "hyperx", "dragonfly", "fattree"]
+
+
+def main_sweep(argv):
+    import argparse
+    import time
+
+    from repro.core import sweep as S, topology as T
+    from repro.core.analysis import analyze
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--ref-servers", type=int, default=2000,
+                    help="budget = cost of slimfly at this server count")
+    ap.add_argument("--max-routers", type=int, default=512)
+    ap.add_argument("--no-kernel", action="store_true")
+    ap.add_argument("--skip-bench", action="store_true",
+                    help="table only; skip the 1024-router timing section")
+    args = ap.parse_args(argv)
+    use_kernel = not args.no_kernel
+
+    result = S.sweep(ref=("slimfly", args.ref_servers),
+                     max_routers=args.max_routers, use_kernel=use_kernel)
+    print(S.format_table(result))
+
+    if args.skip_bench:
+        return
+    # -- batched sweep vs looping analyze() at ~1024 routers --------------
+    bench = [T.make("polarfly", q=31),           # 993 routers, diameter 2
+             T.make("jellyfish", n=1024, r=16, concentration=8)]
+    print(f"\nBatched sweep vs per-topology analyze() loop at ~1k routers "
+          f"({', '.join(g.name for g in bench)}):")
+    t0 = time.time()
+    swept = S.sweep(graphs=bench, use_kernel=use_kernel, budget=0.0)
+    t_batch = time.time() - t0
+    t0 = time.time()
+    for g in bench:
+        analyze(g, use_kernel=use_kernel)
+    t_loop = time.time() - t0
+    print(f"  batched sweep: {t_batch:6.1f}s   "
+          f"analyze() loop: {t_loop:6.1f}s   "
+          f"speedup: {t_loop / t_batch:.2f}x (target >= 2x)")
+    for row in swept["rows"]:
+        print(f"  {row['params']:<24} diam={row['diameter']} "
+              f"mult={row['mult_mean']:.2f} tput_lb={row['tput_lb']:.4f}")
+
+
+if "--sweep" in sys.argv:
+    main_sweep(sys.argv[1:])
+    sys.exit(0)
+
 from repro.core import routing as R, topology as T, workload as W
 from repro.core.analysis import AnalysisEngine
 from repro.core.collectives import (
     PhysicalFabric, plan_mesh_mapping, pod_traffic_report,
 )
-
-FAMILIES = ["slimfly", "jellyfish", "xpander", "hyperx", "dragonfly", "fattree"]
 
 # samp-max: flows over the most loaded link, one sampled uniform-over-all-
 # shortest-paths route per flow. ecmp/vlb/slack1-max: the *exact expected*

@@ -38,7 +38,7 @@ class AnalysisEngine:
     """
 
     STAGES = ("distances", "multiplicities", "diversity", "spectral",
-              "histograms", "throughput")
+              "histograms", "throughput", "comparison")
     #: `report(stages=None)` runs these; throughput is opt-in (it runs an
     #: iterative max-concurrent-flow solve, not a closed-form metric)
     DEFAULT_STAGES = ("distances", "multiplicities", "diversity", "spectral",
@@ -119,6 +119,43 @@ class AnalysisEngine:
             self._cache["throughput"] = res
         return self._cache["throughput"]
 
+    def comparison(self) -> Dict[str, object]:
+        """The equal-cost comparison row for this one topology.
+
+        The per-graph counterpart of the batched `core.sweep` driver: the
+        same columns (diameter, average shortest-path length, exact
+        shortest-path multiplicity, ECMP saturation-throughput lower bound
+        via O(diameter) Brandes accumulation, construction cost and power
+        from the attached TopologySpec), sharing this engine's APSP result.
+        Graphs built outside the registry carry no spec; their cost/power
+        cells are None.
+        """
+        if not self.exact:
+            raise ValueError("comparison stage needs the dense APSP result")
+        if "comparison" not in self._cache:
+            from ..routing.assign import ecmp_all_pairs_loads
+            from ..costmodel import cost_report
+            from .paths import shortest_path_multiplicity
+
+            dist = self.distances()
+            _, mult = shortest_path_multiplicity(
+                self.g, dist, use_kernel=self.use_kernel)
+            adj = self.g.adjacency_dense(np.float64)
+            loads = ecmp_all_pairs_loads(dist, mult, adj,
+                                         use_kernel=self.use_kernel)
+            off = np.isfinite(dist) & (dist > 0)
+            peak = float(loads.max())
+            spec = self.g.meta.get("spec")
+            cost = cost_report(spec) if spec is not None else {}
+            self._cache["comparison"] = {
+                "ecmp_saturation_throughput": 1.0 / peak if peak > 0 else 1.0,
+                "path_multiplicity_mean": (float(mult[off].mean())
+                                           if off.any() else 0.0),
+                "construction_cost": cost.get("cost_total"),
+                "power_w": cost.get("power_total_w"),
+            }
+        return self._cache["comparison"]
+
     # -- stage reports (summary dicts) -------------------------------------
 
     def _report_distances(self) -> Dict:
@@ -183,6 +220,9 @@ class AnalysisEngine:
             reachable = d[d > 0]
             hist = np.bincount(reachable).tolist()
         return {"path_histogram": hist}
+
+    def _report_comparison(self) -> Dict:
+        return dict(self.comparison())
 
     def _report_throughput(self) -> Dict:
         # throughput is never in DEFAULT_STAGES, so reaching this stage

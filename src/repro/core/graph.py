@@ -83,6 +83,27 @@ class Graph:
         """Full router radix: network ports + server ports."""
         return self.network_radix + self.concentration
 
+    # -- spec / link inventory --------------------------------------------
+    @property
+    def spec(self):
+        """The generator's TopologySpec (``meta["spec"]``), or None for
+        graphs built outside the registry."""
+        return self.meta.get("spec")
+
+    def link_classes(self):
+        """Link inventory by cable class (from the attached spec).
+
+        Edge arrays are canonicalized (sorted/deduplicated) at construction,
+        so per-edge attributes cannot survive; the inventory is therefore
+        aggregate — (name, count, length_m, medium) per class, counts
+        summing to ``num_edges`` — which is all the cost/power models need.
+        Raises KeyError when no spec is attached.
+        """
+        s = self.spec
+        if s is None:
+            raise KeyError(f"{self.name}: no TopologySpec in meta")
+        return s.link_classes
+
     # -- representations ---------------------------------------------------
     def csr(self) -> Tuple[np.ndarray, np.ndarray]:
         """Symmetric CSR (indptr, indices) over both edge directions."""

@@ -1,0 +1,366 @@
+"""Equal-cost topology comparison driver — the paper's headline table.
+
+Instantiates many families at *matched construction cost* (``by_cost``
+ladder solving over closed-form specs) and pushes the whole set through the
+analysis stack **batched**: every topology's adjacency/distance block is
+padded to one shared tile size and stacked along a leading axis, so the
+semiring kernels (`repro.kernels.ops.batched_minplus_matmul` /
+``batched_count_matmul``) run one launch per product for the entire sweep
+instead of one per topology. Stages:
+
+1. level-synchronous Brandes frontier expansion — ONE stacked counting
+   product per BFS level yields hop distances AND exact shortest-path
+   multiplicities together (``x_k = F_k @ A``; pairs first reached at
+   level k+1 get dist = k+1 and sigma = x). Hop-distance BFS needs no
+   tropical products at all, and the counting semiring rides the kernel's
+   fast MXU path — this is where the sweep's speedup over looping
+   ``analyze()`` per topology comes from (the loop's engine runs general
+   min-plus squaring on the VPU path; benchmarked in
+   ``benchmarks/bench_analysis.py`` and the ``--sweep`` example);
+2. stacked Brandes accumulation (`routing.assign.ecmp_all_pairs_loads`,
+   2 products per level) -> exact expected ECMP link loads under uniform
+   all-pairs demand, whose max gives the per-pair saturation-throughput
+   lower bound ``lambda >= 1 / max_load`` (capacity 1 per link direction);
+3. `core.costmodel` over each spec -> construction cost and power columns.
+
+Total: 3 x diameter stacked MXU-path products for the whole sweep, with
+the jitted batched kernel traced once for the shared padded shape.
+
+CLI::
+
+  python -m repro.core.sweep [--families a,b,... ] [--ref-servers N]
+                             [--budget C] [--max-routers N] [--out DIR]
+  python -m repro.core.sweep --check    # CI gate: sizers + connectivity
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import costmodel
+from . import topology as topo
+from .graph import Graph
+from .routing.assign import ecmp_all_pairs_loads
+
+__all__ = ["equal_cost_graphs", "batched_apsp", "batched_dist_mult",
+           "sweep", "format_table", "check_families"]
+
+_INF = np.float32(np.inf)
+
+
+# -- batched products ---------------------------------------------------------
+
+def _batched_minplus(use_kernel: bool):
+    if use_kernel:
+        import jax.numpy as jnp
+
+        from .. import kernels
+
+        return lambda a, b: np.asarray(
+            kernels.ops.batched_minplus_matmul(jnp.asarray(a), jnp.asarray(b)))
+
+    def oracle(a: np.ndarray, b: np.ndarray, chunk: int = 64) -> np.ndarray:
+        out = np.empty((a.shape[0], a.shape[1], b.shape[2]), np.float32)
+        for i in range(a.shape[0]):  # row-chunked to bound the broadcast
+            for lo in range(0, a.shape[1], chunk):
+                hi = min(a.shape[1], lo + chunk)
+                out[i, lo:hi] = np.min(
+                    a[i, lo:hi, :, None] + b[i][None, :, :], axis=1)
+        return out
+
+    return oracle
+
+
+def _batched_count(use_kernel: bool):
+    if use_kernel:
+        import jax.numpy as jnp
+
+        from .. import kernels
+
+        return lambda a, b: np.asarray(
+            kernels.ops.batched_count_matmul(jnp.asarray(a), jnp.asarray(b)))
+    return lambda a, b: np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+
+# -- equal-cost instantiation -------------------------------------------------
+
+def equal_cost_graphs(
+        families: Optional[Sequence[str]] = None,
+        budget: Optional[float] = None,
+        ref: Tuple[str, int] = ("slimfly", 2000),
+        max_routers: int = 1024,
+) -> Tuple[List[Graph], float]:
+    """Build one graph per family at matched construction cost.
+
+    ``budget`` defaults to the cost of ``ref`` = (family, n_servers) sized
+    by :func:`topology.by_servers`. ``max_routers`` additionally caps every
+    instance (keeps the sweep inside the dense-analysis regime; the cost
+    column then reports what each family actually spends). Families whose
+    smallest configuration exceeds the budget are skipped with a notice.
+    """
+    families = list(families) if families else topo.families()
+    if budget is None:
+        params = topo.solve(ref[0], lambda s: s.n_servers, ref[1], "closest")
+        budget = costmodel.cost_report(topo.spec(ref[0], **params))["cost_total"]
+    graphs: List[Graph] = []
+    for fam in families:
+        try:
+            g = topo.by_cost(fam, budget, max_routers=max_routers)
+        except ValueError as exc:
+            print(f"[sweep] skipping {fam}: {exc}")
+            continue
+        g.validate()
+        graphs.append(g)
+    return graphs, float(budget)
+
+
+# -- batched analysis stages --------------------------------------------------
+
+def _stack_adjacency(graphs: Sequence[Graph]) -> np.ndarray:
+    """Stack adjacencies padded to the max router count; padding rows are
+    isolated phantom routers (all-zero), inert under every product."""
+    p = max(g.n for g in graphs)
+    adj = np.zeros((len(graphs), p, p), np.float32)
+    for i, g in enumerate(graphs):
+        adj[i, :g.n, :g.n] = g.adjacency_dense(np.float32)
+    return adj
+
+
+def _stack_seeds(graphs: Sequence[Graph]) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack distance seeds and adjacencies, padded to the max router count.
+
+    Padding rows/cols are +inf (no edges) with a 0 diagonal — isolated
+    phantom routers that can never shorten a real path, so one stacked
+    squaring loop serves every topology at once.
+    """
+    adj = _stack_adjacency(graphs)
+    nb, p, _ = adj.shape
+    dist = np.full((nb, p, p), _INF, np.float32)
+    for i, g in enumerate(graphs):
+        dist[i, :g.n, :g.n] = g.distance_seed()
+    idx = np.arange(p)
+    dist[:, idx, idx] = 0.0
+    return dist, adj
+
+
+def batched_apsp(graphs: Sequence[Graph], use_kernel: bool = True
+                 ) -> np.ndarray:
+    """All-pairs hop distances for a whole stack of topologies at once."""
+    dist, _ = _stack_seeds(graphs)
+    return _apsp_from_stack(dist, _batched_minplus(use_kernel))
+
+
+def _apsp_from_stack(dist: np.ndarray, minplus) -> np.ndarray:
+    max_squarings = max(1, int(np.ceil(np.log2(max(2, dist.shape[1])))))
+    for _ in range(max_squarings):
+        nxt = minplus(dist, dist)
+        if np.array_equal(nxt, dist):
+            return nxt
+        dist = nxt
+    return dist
+
+
+def batched_dist_mult(adj: np.ndarray, count,
+                      max_levels: Optional[int] = None):
+    """Hop distances AND shortest-path multiplicities from one stacked
+    counting product per BFS level (Brandes' frontier identity).
+
+    ``x_k = F_k @ A`` extends the level-k multiplicity frontier by one hop;
+    any pair first reached at level k+1 has ``sigma = x_k`` there. Distances
+    fall out of *when* a pair is first reached, so hop-distance APSP needs
+    no tropical (VPU-path) products at all — every product is a counting
+    matmul on the kernel's fast MXU path. Stops as soon as a sweep makes no
+    new pair reachable (= max diameter over the stack, +1 to confirm).
+    Padding rows are isolated phantoms: their frontier never grows.
+    """
+    nb, p, _ = adj.shape
+    if max_levels is None:
+        max_levels = p
+    dist = np.full((nb, p, p), _INF, np.float32)
+    idx = np.arange(p)
+    dist[:, idx, idx] = 0.0
+    mult = np.where(dist == 0, 1.0, 0.0).astype(np.float64)
+    frontier = mult.astype(adj.dtype)
+    for level in range(1, max_levels + 1):
+        x = np.asarray(count(frontier, adj))
+        new = (x > 0) & ~np.isfinite(dist)
+        if not new.any():
+            break
+        dist[new] = level
+        mult = np.where(new, x, mult)
+        frontier = np.where(new, x, 0.0).astype(adj.dtype)
+    return dist, mult
+
+
+# -- the driver ---------------------------------------------------------------
+
+def sweep(families: Optional[Sequence[str]] = None,
+          budget: Optional[float] = None,
+          ref: Tuple[str, int] = ("slimfly", 2000),
+          max_routers: int = 1024,
+          use_kernel: bool = True,
+          throughput: bool = True,
+          graphs: Optional[Sequence[Graph]] = None) -> Dict:
+    """Run the equal-cost comparison; returns ``{"rows": [...], ...}``.
+
+    Pass ``graphs`` to analyze a pre-built list (the benchmarks reuse this
+    to time the batched path against a per-topology ``analyze()`` loop on
+    identical instances).
+    """
+    t0 = time.time()
+    if graphs is None:
+        graphs, budget = equal_cost_graphs(families, budget, ref, max_routers)
+    if not graphs:
+        raise ValueError("sweep has no topologies to compare")
+    count = _batched_count(use_kernel)
+
+    adj = _stack_adjacency(graphs)
+    dist, mult = batched_dist_mult(adj, count)
+    loads = (ecmp_all_pairs_loads(dist, mult, adj, product=count)
+             if throughput else None)
+
+    rows = []
+    for i, g in enumerate(graphs):
+        n = g.n
+        d = dist[i, :n, :n]
+        m = mult[i, :n, :n]
+        off = np.isfinite(d) & (d > 0)
+        spec = g.meta.get("spec")
+        cost = costmodel.cost_report(spec) if spec is not None else {}
+        row = {
+            "family": g.meta["spec"].family if spec else g.name,
+            "params": spec.describe() if spec else g.name,
+            "routers": n,
+            "servers": g.num_servers,
+            "radix": spec.router_radix if spec else g.radix,
+            "diameter": int(d[off].max()) if off.any() else 0,
+            "avg_spl": float(d[off].mean()) if off.any() else 0.0,
+            "mult_mean": float(m[off].mean()) if off.any() else 0.0,
+            "mult_min": float(m[off].min()) if off.any() else 0.0,
+            "cost": cost.get("cost_total"),
+            "power_kw": (cost.get("power_total_w", 0.0) / 1e3
+                         if cost else None),
+            "cables_electrical": cost.get("cables_electrical"),
+            "cables_optical": cost.get("cables_optical"),
+        }
+        if loads is not None:
+            peak = float(loads[i, :n, :n].max())
+            row["tput_lb"] = 1.0 / peak if peak > 0 else 1.0
+        rows.append(row)
+    return {
+        "rows": rows,
+        "budget": budget,
+        "batched": True,
+        "use_kernel": use_kernel,
+        "elapsed_s": round(time.time() - t0, 2),
+    }
+
+
+_COLS = [
+    ("family", "<12s", "family"),
+    ("routers", ">8d", "routers"),
+    ("servers", ">9d", "servers"),
+    ("radix", ">6d", "radix"),
+    ("diam", ">5d", "diameter"),
+    ("avg-spl", ">8.2f", "avg_spl"),
+    ("mult", ">10.2f", "mult_mean"),
+    ("tput-lb", ">8.4f", "tput_lb"),
+    ("cost", ">11.3e", "cost"),
+    ("power-kW", ">9.1f", "power_kw"),
+]
+
+
+def format_table(result: Dict) -> str:
+    """Paper-style fixed-width comparison table."""
+    budget = result.get("budget")
+    budget_s = f"budget={budget:.3e} " if budget else ""
+    lines = [f"equal-cost sweep: {budget_s}"
+             f"({len(result['rows'])} families, "
+             f"{result['elapsed_s']}s batched analysis)"]
+    hdr = "".join(f"{name:>{_w(fmt)}s}" for name, fmt, _ in _COLS)
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for row in sorted(result["rows"], key=lambda r: r["family"]):
+        cells = []
+        for _, fmt, key in _COLS:
+            v = row.get(key)
+            cells.append(" " * _w(fmt) if v is None else f"{v:{fmt}}")
+        lines.append("".join(cells))
+    return "\n".join(lines)
+
+
+def _w(fmt: str) -> int:
+    digits = ""
+    for ch in fmt[1:]:
+        if ch.isdigit():
+            digits += ch
+        else:
+            break
+    return int(digits) if digits else 10
+
+
+def check_families(n_servers: int = 300) -> List[str]:
+    """CI gate: every registered family must have a working sizer (spec +
+    ladder) and produce a connected graph. Returns failure messages."""
+    failures = []
+    for fam in topo.families():
+        try:
+            g = topo.by_servers(fam, n_servers)
+            g.validate()
+            if "spec" not in g.meta:
+                failures.append(f"{fam}: generator attaches no TopologySpec")
+        except Exception as exc:  # noqa: BLE001 - gate reports everything
+            failures.append(f"{fam}: {type(exc).__name__}: {exc}")
+    return failures
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--families", default=None,
+                    help="comma-separated (default: all registered)")
+    ap.add_argument("--budget", type=float, default=None)
+    ap.add_argument("--ref-family", default="slimfly")
+    ap.add_argument("--ref-servers", type=int, default=2000)
+    ap.add_argument("--max-routers", type=int, default=512)
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="numpy/jnp oracle products instead of Pallas")
+    ap.add_argument("--out", default=None,
+                    help="directory for comparison.{txt,json}")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: verify sizers + connectivity, no sweep")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        failures = check_families()
+        for msg in failures:
+            print(f"[sweep --check] FAIL {msg}")
+        if not failures:
+            print(f"[sweep --check] {len(topo.families())} families OK "
+                  f"(sizer + spec + connected)")
+        return 1 if failures else 0
+
+    fams = args.families.split(",") if args.families else None
+    result = sweep(fams, budget=args.budget,
+                   ref=(args.ref_family, args.ref_servers),
+                   max_routers=args.max_routers,
+                   use_kernel=not args.no_kernel)
+    table = format_table(result)
+    print(table)
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "comparison.txt").write_text(table + "\n")
+        (out / "comparison.json").write_text(
+            json.dumps(result, indent=1, default=str))
+        print(f"[sweep] wrote {out}/comparison.{{txt,json}}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

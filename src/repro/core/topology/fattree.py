@@ -20,16 +20,34 @@ import numpy as np
 
 from ..graph import Graph
 from .base import register
+from .spec import ELECTRICAL_LENGTH_M, LinkClass, TopologySpec, optical_length
 
 
-def _ft_sizer(n_servers: int) -> dict:
-    # full-bandwidth: N = k^3/4 => k = (4N)^(1/3), rounded to even
-    k = int(round((4 * n_servers) ** (1 / 3)))
-    k = max(4, k + (k % 2))
-    return {"k": k}
+def spec_fattree(k: int, oversubscription: float = 1.0) -> TopologySpec:
+    """Closed form: 5k^2/4 switches; k^3/4 intra-pod (electrical) edge<->agg
+    links and k^3/4 pod-to-spine (optical) agg<->core links; servers hang
+    off the k^2/2 edge switches only."""
+    if k % 2:
+        raise ValueError("fat tree requires even k")
+    half = k // 2
+    n_core, n_agg, n_edge = half * half, k * half, k * half
+    n = n_core + n_agg + n_edge
+    conc = int(round(half * oversubscription))
+    return TopologySpec(
+        family="fattree", params={"k": k},
+        n_routers=n, n_servers=n_edge * conc, concentration=0,
+        network_radix=k, expected_diameter=4,
+        link_classes=(
+            LinkClass("edge-agg", k * half * half, ELECTRICAL_LENGTH_M,
+                      "electrical"),
+            LinkClass("agg-core", k * half * half, optical_length(n),
+                      "optical"),
+        ),
+        radix_counts=((k, n_core), (k, n_agg), (half + conc, n_edge)),
+    )
 
 
-@register("fattree", _ft_sizer)
+@register("fattree", spec=spec_fattree, ladder=lambda i: {"k": 2 * (i + 2)})
 def make_fattree(k: int, oversubscription: float = 1.0) -> Graph:
     if k % 2:
         raise ValueError("fat tree requires even k")

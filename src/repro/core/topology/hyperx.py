@@ -12,15 +12,38 @@ import numpy as np
 
 from ..graph import Graph
 from .base import register
+from .spec import ELECTRICAL_LENGTH_M, LinkClass, TopologySpec, optical_length
 
 
-def _hyperx_sizer(n_servers: int) -> dict:
-    # 2D square HyperX, concentration ~ S/2 per router: N = S^2 * S/2 = S^3/2
-    side = max(2, int(round((2 * n_servers) ** (1 / 3))))
+def spec_hyperx(dims: Sequence[int] = (8, 8),
+                concentration: int = 4) -> TopologySpec:
+    """Closed form: per dimension i, n*(S_i - 1)/2 links — dimension 0 is
+    the rack-local (electrical) one, higher dimensions span the floor."""
+    dims = tuple(int(d) for d in dims)
+    n = int(np.prod(dims))
+    classes = []
+    for axis, size in enumerate(dims):
+        if size < 2:
+            continue
+        medium = "electrical" if axis == 0 else "optical"
+        length = ELECTRICAL_LENGTH_M if axis == 0 else optical_length(n)
+        classes.append(LinkClass(f"dim{axis}", n * (size - 1) // 2,
+                                 length, medium))
+    return TopologySpec(
+        family="hyperx", params={"dims": dims, "concentration": concentration},
+        n_routers=n, n_servers=n * concentration, concentration=concentration,
+        network_radix=sum(d - 1 for d in dims),
+        expected_diameter=len([d for d in dims if d > 1]),
+        link_classes=tuple(classes),
+    )
+
+
+def _hyperx_ladder(i: int) -> dict:
+    side = i + 2
     return {"dims": (side, side), "concentration": max(1, side // 2)}
 
 
-@register("hyperx", _hyperx_sizer)
+@register("hyperx", spec=spec_hyperx, ladder=_hyperx_ladder)
 def make_hyperx(dims: Sequence[int] = (8, 8), concentration: int = 4) -> Graph:
     dims = tuple(int(d) for d in dims)
     n = int(np.prod(dims))

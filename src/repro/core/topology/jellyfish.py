@@ -10,18 +10,34 @@ import numpy as np
 
 from ..graph import Graph
 from .base import register
+from .spec import LinkClass, TopologySpec, optical_length
 
 
-def _jf_sizer(n_servers: int) -> dict:
-    # mirror the slim fly cost point: radix ~ 3q/2, half ports to servers.
-    # N = n_r * p with p = r/2 and r ≈ 1.5 * (N/1.5)^(1/3)
-    q = max(5, round((n_servers / 1.5) ** (1 / 3)))
-    r = max(4, int(round(1.5 * q)))
-    n_r = max(r + 1, int(round(n_servers / max(1, r // 2))))
-    return {"n": n_r, "r": r, "concentration": max(1, r // 2)}
+def spec_jellyfish(n: int, r: int, concentration: int = 1,
+                   seed: int = 0) -> TopologySpec:
+    """Closed form: r-regular on n routers (n*r/2 links). Random wiring has
+    no rack locality, so every cable is priced as an optical floor run."""
+    if n * r % 2 != 0:
+        n += 1  # generator applies the same even-stub-count fix
+    return TopologySpec(
+        family="jellyfish",
+        params={"n": n, "r": r, "concentration": concentration, "seed": seed},
+        n_routers=n, n_servers=n * concentration, concentration=concentration,
+        network_radix=r, expected_diameter=None,
+        link_classes=(
+            LinkClass("random", n * r // 2, optical_length(n), "optical"),),
+    )
 
 
-@register("jellyfish", _jf_sizer)
+def _jf_ladder(i: int) -> dict:
+    # mirror the slim fly cost point: network radix r ~ 3q/2 with
+    # n = 2q^2 = 8r^2/9 routers, half the ports to servers
+    r = 4 + i
+    n = max(r + 1, round(8 * r * r / 9))
+    return {"n": n, "r": r, "concentration": max(1, r // 2)}
+
+
+@register("jellyfish", spec=spec_jellyfish, ladder=_jf_ladder)
 def make_jellyfish(n: int, r: int, concentration: int = 1, seed: int = 0) -> Graph:
     if n * r % 2 != 0:
         n += 1  # need even stub count

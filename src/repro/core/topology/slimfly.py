@@ -26,9 +26,10 @@ from __future__ import annotations
 import numpy as np
 
 from ..graph import Graph
-from .base import register, pick_prime
+from .base import _PRIMES_1MOD4, register
+from .spec import ELECTRICAL_LENGTH_M, LinkClass, TopologySpec, optical_length
 
-__all__ = ["make_slimfly"]
+__all__ = ["make_slimfly", "spec_slimfly"]
 
 
 def _delta_for(q: int) -> int:
@@ -69,19 +70,29 @@ def _generator_sets(q: int, delta: int):
     return X, Xp
 
 
-def _pick_prime_1mod4(target: int) -> int:
-    from .base import _PRIMES
-
-    for p in _PRIMES:
-        if p >= target and p % 4 == 1:
-            return p
-    raise ValueError(f"no prime ≡ 1 (mod 4) >= {target} in table")
+def spec_slimfly(q: int, concentration: int | None = None) -> TopologySpec:
+    """Closed form: 2q^2 routers of network radix (3q-1)/2; the two Cayley
+    halves contribute q^2(q-1)/2 rack-local (electrical) links, the
+    cross-product matching contributes q^3 machine-room (optical) links."""
+    delta = _delta_for(q)
+    k = (3 * q - delta) // 2
+    p = concentration if concentration is not None else int(np.ceil(k / 2))
+    n = 2 * q * q
+    return TopologySpec(
+        family="slimfly", params={"q": q}, n_routers=n, n_servers=n * p,
+        concentration=p, network_radix=k, expected_diameter=2,
+        link_classes=(
+            LinkClass("intra", q * q * (q - 1) // 2, ELECTRICAL_LENGTH_M,
+                      "electrical"),
+            LinkClass("cross", q ** 3, optical_length(n), "optical"),
+        ),
+    )
 
 
 @register(
-    "slimfly",
-    # N = 2 q^2 * p, p ≈ k/2 ≈ 3q/4  =>  N ≈ 1.5 q^3  =>  q ≈ (N/1.5)^(1/3)
-    lambda s: {"q": _pick_prime_1mod4(max(5, round((s / 1.5) ** (1 / 3))))},
+    "slimfly", spec=spec_slimfly,
+    # ladder: successive primes q ≡ 1 (mod 4) from the shared table
+    ladder=lambda i: {"q": _PRIMES_1MOD4[i]},
 )
 def make_slimfly(q: int, concentration: int | None = None) -> Graph:
     delta = _delta_for(q)

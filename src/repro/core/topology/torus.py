@@ -12,15 +12,36 @@ import numpy as np
 
 from ..graph import Graph
 from .base import register
+from .spec import ELECTRICAL_LENGTH_M, LinkClass, TopologySpec, optical_length
 
 
-def _torus_sizer(n_servers: int) -> dict:
-    # one "server" (chip) per router; square 2D torus
-    side = max(2, int(round(np.sqrt(n_servers))))
-    return {"dims": (side, side), "concentration": 1}
+def _torus_axis_links(n: int, size: int, wrap: bool) -> int:
+    if size < 2:
+        return 0
+    if wrap:
+        return n // 2 if size == 2 else n  # length-2 rings collapse
+    return n * (size - 1) // size
 
 
-@register("torus", _torus_sizer)
+def spec_torus(dims: Sequence[int] = (16, 16), concentration: int = 1,
+               wrap: bool = True) -> TopologySpec:
+    dims = tuple(int(d) for d in dims)
+    n = int(np.prod(dims))
+    count = sum(_torus_axis_links(n, s, wrap) for s in dims)
+    radix = sum((1 if s == 2 else 2) for s in dims if s >= 2)
+    return TopologySpec(
+        family="torus",
+        params={"dims": dims, "concentration": concentration, "wrap": wrap},
+        n_routers=n, n_servers=n * concentration, concentration=concentration,
+        network_radix=radix,
+        expected_diameter=sum((d // 2 if wrap else d - 1) for d in dims),
+        link_classes=(
+            LinkClass("neighbor", count, ELECTRICAL_LENGTH_M, "electrical"),),
+    )
+
+
+@register("torus", spec=spec_torus,
+          ladder=lambda i: {"dims": (i + 2, i + 2), "concentration": 1})
 def make_torus(dims: Sequence[int] = (16, 16), concentration: int = 1,
                wrap: bool = True) -> Graph:
     dims = tuple(int(d) for d in dims)
@@ -51,7 +72,27 @@ def make_torus(dims: Sequence[int] = (16, 16), concentration: int = 1,
     )
 
 
-@register("hypercube", lambda s: {"dim": max(1, int(np.ceil(np.log2(max(s, 2)))))})
+def spec_hypercube(dim: int, concentration: int = 1) -> TopologySpec:
+    """Closed form: n/2 links per bit dimension; the three lowest bit
+    dimensions stay inside a rack (electrical), higher bits cross the
+    floor (optical)."""
+    n = 1 << dim
+    elec_bits = min(dim, 3)
+    classes = [LinkClass("low-bits", (n // 2) * elec_bits,
+                         ELECTRICAL_LENGTH_M, "electrical")]
+    if dim > elec_bits:
+        classes.append(LinkClass("high-bits", (n // 2) * (dim - elec_bits),
+                                 optical_length(n), "optical"))
+    return TopologySpec(
+        family="hypercube", params={"dim": dim, "concentration": concentration},
+        n_routers=n, n_servers=n * concentration, concentration=concentration,
+        network_radix=dim, expected_diameter=dim,
+        link_classes=tuple(classes),
+    )
+
+
+@register("hypercube", spec=spec_hypercube,
+          ladder=lambda i: {"dim": i + 1, "concentration": 1})
 def make_hypercube(dim: int, concentration: int = 1) -> Graph:
     n = 1 << dim
     ids = np.arange(n, dtype=np.int64)

@@ -12,18 +12,36 @@ import numpy as np
 
 from ..graph import Graph
 from .base import register
+from .spec import LinkClass, TopologySpec, optical_length
 
 
-def _xp_sizer(n_servers: int) -> dict:
-    q = max(5, round((n_servers / 1.5) ** (1 / 3)))
-    r = max(4, int(round(1.5 * q)))
-    p = max(1, r // 2)
-    n_target = max(r + 1, n_servers // p)
-    lifts = max(0, int(np.ceil(np.log2(n_target / (r + 1)))))
-    return {"r": r, "lifts": lifts, "concentration": p}
+def spec_xpander(r: int, lifts: int, concentration: int = 1,
+                 seed: int = 0) -> TopologySpec:
+    """Closed form: 2-lifts preserve degree, so (r+1)*2^lifts routers at
+    network radix r with n*r/2 links; lifted wiring has no locality, so
+    cables are priced as optical floor runs."""
+    n = (r + 1) << lifts
+    return TopologySpec(
+        family="xpander",
+        params={"r": r, "lifts": lifts, "concentration": concentration,
+                "seed": seed},
+        n_routers=n, n_servers=n * concentration, concentration=concentration,
+        network_radix=r, expected_diameter=None,
+        link_classes=(
+            LinkClass("lifted", n * r // 2, optical_length(n), "optical"),),
+    )
 
 
-@register("xpander", _xp_sizer)
+def _xp_ladder(i: int) -> dict:
+    # even radix ladder; lifts chosen so the router count tracks the
+    # jellyfish/slimfly cost point n ~ 8r^2/9 (quantized by powers of two)
+    r = 6 + 2 * i
+    target = max(r + 1, round(8 * r * r / 9))
+    lifts = max(0, round(np.log2(target / (r + 1))))
+    return {"r": r, "lifts": int(lifts), "concentration": max(1, r // 2)}
+
+
+@register("xpander", spec=spec_xpander, ladder=_xp_ladder)
 def make_xpander(r: int, lifts: int, concentration: int = 1, seed: int = 0) -> Graph:
     rng = np.random.default_rng(seed)
     n = r + 1

@@ -17,10 +17,11 @@ from .minplus import minplus_matmul_pallas
 from .reachability import reachability_step_pallas
 from .seghist import value_histogram_pallas
 from .semiring import (BOOLEAN, COUNTING, TROPICAL, TROPICAL_COUNT,
-                       semiring_matmul_pallas)
+                       semiring_matmul_batched_pallas, semiring_matmul_pallas)
 
 __all__ = ["minplus_matmul", "reachability_step", "value_histogram",
-           "count_matmul", "minplus_count_matmul"]
+           "count_matmul", "minplus_count_matmul",
+           "batched_minplus_matmul", "batched_count_matmul"]
 
 # CPU containers run the kernels through the Pallas interpreter; on TPU flip
 # this (or pass interpret=False explicitly) to run compiled Mosaic kernels.
@@ -94,6 +95,45 @@ def minplus_count_matmul(da: jnp.ndarray, ca: jnp.ndarray,
     return d[:m, :n], c[:m, :n]
 
 
+def _pad_to_batched(x: jnp.ndarray, bm: int, bn: int, fill) -> jnp.ndarray:
+    _, m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)), constant_values=fill)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def batched_minplus_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                           bm: int = 256, bn: int = 256,
+                           bk: int = 256) -> jnp.ndarray:
+    """Tropical product over a stacked leading axis: (B, M, K) x (B, K, N).
+
+    One kernel launch for the whole stack — the sweep driver's APSP path.
+    Blocks default to 256 (vs. 128 for the 2D op): the stacked workload
+    amortizes per-block dispatch, and bigger tiles cut block count 8x.
+    """
+    m, n = a.shape[1], b.shape[2]
+    ap = _pad_to_batched(a.astype(jnp.float32), bm, bk, TROPICAL.pad_a[0])
+    bp = _pad_to_batched(b.astype(jnp.float32), bk, bn, TROPICAL.pad_b[0])
+    (out,) = semiring_matmul_batched_pallas(TROPICAL, (ap,), (bp,), bm=bm,
+                                            bn=bn, bk=bk, interpret=INTERPRET)
+    return out[:, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def batched_count_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                         bm: int = 256, bn: int = 256,
+                         bk: int = 256) -> jnp.ndarray:
+    """Counting product over a stacked leading axis (MXU path per block)."""
+    m, n = a.shape[1], b.shape[2]
+    ap = _pad_to_batched(a.astype(jnp.float32), bm, bk, COUNTING.pad_a[0])
+    bp = _pad_to_batched(b.astype(jnp.float32), bk, bn, COUNTING.pad_b[0])
+    (out,) = semiring_matmul_batched_pallas(COUNTING, (ap,), (bp,), bm=bm,
+                                            bn=bn, bk=bk, interpret=INTERPRET)
+    return out[:, :m, :n]
+
+
 @functools.partial(jax.jit, static_argnames=("num_bins", "bm", "bn"))
 def value_histogram(x: jnp.ndarray, num_bins: int,
                     bm: int = 256, bn: int = 256) -> jnp.ndarray:
@@ -109,3 +149,5 @@ reachability_step_ref = ref.reachability_step_ref
 value_histogram_ref = ref.value_histogram_ref
 count_matmul_ref = ref.count_matmul_ref
 minplus_count_matmul_ref = ref.minplus_count_matmul_ref
+batched_minplus_matmul_ref = ref.batched_minplus_matmul_ref
+batched_count_matmul_ref = ref.batched_count_matmul_ref

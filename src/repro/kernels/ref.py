@@ -9,6 +9,7 @@ import jax.numpy as jnp
 __all__ = [
     "minplus_matmul_ref", "reachability_step_ref", "value_histogram_ref",
     "count_matmul_ref", "minplus_count_matmul_ref",
+    "batched_minplus_matmul_ref", "batched_count_matmul_ref",
 ]
 
 
@@ -46,6 +47,18 @@ def minplus_count_matmul_ref(da: jnp.ndarray, ca: jnp.ndarray,
     prod = ca[:, :, None] * cb[None, :, :]
     c = jnp.sum(jnp.where(s == d[:, None, :], prod, 0.0), axis=1)
     return d, c
+
+
+def batched_minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Stacked tropical product: out[b,i,j] = min_k a[b,i,k] + b[b,k,j]."""
+    assert a.ndim == 3 and b.ndim == 3 and a.shape[2] == b.shape[1]
+    return jnp.min(a[:, :, :, None] + b[:, None, :, :], axis=2)
+
+
+def batched_count_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Stacked counting product — plain batched matmul over f32 counts."""
+    return jnp.einsum("bik,bkj->bij", a.astype(jnp.float32),
+                      b.astype(jnp.float32))
 
 
 def value_histogram_ref(x: jnp.ndarray, num_bins: int) -> jnp.ndarray:

@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
-    "Semiring", "semiring_matmul_pallas",
+    "Semiring", "semiring_matmul_pallas", "semiring_matmul_batched_pallas",
     "TROPICAL", "BOOLEAN", "COUNTING", "TROPICAL_COUNT",
 ]
 
@@ -83,6 +83,25 @@ class Semiring:
 
 # -- kernel bodies ------------------------------------------------------------
 
+def _vpu_block(sr: Semiring, a, b, acc, sub_k: int):
+    """Shared VPU math: semiring product-accumulate of one (bm, bk) x
+    (bk, bn) block pair onto ``acc``, K unrolled in sub_k slabs."""
+    bm, bk = a[0].shape
+    bn = b[0].shape[1]
+    # Unrolled K-blocking: process sub_k rows of b at a time so the
+    # (bm, sub_k, bn) broadcast working set stays register/VMEM-friendly.
+    for k0 in range(0, bk, sub_k):
+        a_slab = tuple(
+            jax.lax.slice(x, (0, k0), (bm, k0 + sub_k))[:, :, None] for x in a
+        )
+        b_slab = tuple(
+            jax.lax.slice(x, (k0, 0), (k0 + sub_k, bn))[None, :, :] for x in b
+        )
+        term = sr.kreduce(sr.combine(a_slab, b_slab))
+        acc = sr.accumulate(acc, term)
+    return acc
+
+
 def _vpu_kernel(*refs, sr: Semiring, sub_k: int):
     """Generic (bm, bk) x (bk, bn) -> (bm, bn) semiring product-accumulate."""
     nf = sr.num_fields
@@ -95,20 +114,8 @@ def _vpu_kernel(*refs, sr: Semiring, sub_k: int):
 
     a = [r[...] for r in a_refs]  # each (bm, bk)
     b = [r[...] for r in b_refs]  # each (bk, bn)
-    bm, bk = a[0].shape
-    bn = b[0].shape[1]
     acc = tuple(r[...] for r in o_refs)
-    # Unrolled K-blocking: process sub_k rows of b at a time so the
-    # (bm, sub_k, bn) broadcast working set stays register/VMEM-friendly.
-    for k0 in range(0, bk, sub_k):
-        a_slab = tuple(
-            jax.lax.slice(x, (0, k0), (bm, k0 + sub_k))[:, :, None] for x in a
-        )
-        b_slab = tuple(
-            jax.lax.slice(x, (k0, 0), (k0 + sub_k, bn))[None, :, :] for x in b
-        )
-        term = sr.kreduce(sr.combine(a_slab, b_slab))
-        acc = sr.accumulate(acc, term)
+    acc = _vpu_block(sr, a, b, acc, sub_k)
     for o_ref, v in zip(o_refs, acc):
         o_ref[...] = v
 
@@ -128,6 +135,45 @@ def _mxu_kernel(a_ref, b_ref, o_ref, acc_ref, *, sr: Semiring, k_blocks: int):
     @pl.when(pl.program_id(2) == k_blocks - 1)
     def _epilogue():
         o_ref[...] = sr.epilogue(acc_ref[...]).astype(o_ref.dtype)
+
+
+def _vpu_kernel_batched(*refs, sr: Semiring, sub_k: int):
+    """Batched VPU body: blocks carry a leading size-1 batch dim.
+
+    Grid is (B, M/bm, N/bn, K/bk) with K innermost, so each (b, i, j)
+    output block stays resident across the K sweep exactly like the 2D
+    kernel; the stacked leading axis only adds an outer grid dimension.
+    """
+    nf = sr.num_fields
+    a_refs, b_refs, o_refs = refs[:nf], refs[nf:2 * nf], refs[2 * nf:]
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        for o_ref, v in zip(o_refs, sr.acc_init):
+            o_ref[...] = jnp.full_like(o_ref, v)
+
+    a = [r[0] for r in a_refs]  # (1, bm, bk) -> (bm, bk)
+    b = [r[0] for r in b_refs]
+    acc = tuple(r[0] for r in o_refs)
+    acc = _vpu_block(sr, a, b, acc, sub_k)
+    for o_ref, v in zip(o_refs, acc):
+        o_ref[...] = v[None]
+
+
+def _mxu_kernel_batched(a_ref, b_ref, o_ref, acc_ref, *, sr: Semiring,
+                        k_blocks: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[0], b_ref[0],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == k_blocks - 1)
+    def _epilogue():
+        o_ref[...] = sr.epilogue(acc_ref[...]).astype(o_ref.dtype)[None]
 
 
 # -- entry point --------------------------------------------------------------
@@ -162,6 +208,51 @@ def semiring_matmul_pallas(sr: Semiring, a: Fields, b: Fields, *,
         scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     else:
         kernel = functools.partial(_vpu_kernel, sr=sr, sub_k=sub_k)
+        scratch = []
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec] * nf + [b_spec] * nf,
+        out_specs=o_spec if nf == 1 else [o_spec] * nf,
+        out_shape=out_shape[0] if nf == 1 else out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*a, *b)
+    return (out,) if nf == 1 else tuple(out)
+
+
+def semiring_matmul_batched_pallas(sr: Semiring, a: Fields, b: Fields, *,
+                                   bm: int = 128, bn: int = 128, bk: int = 128,
+                                   sub_k: int = 8,
+                                   interpret: bool = True) -> Fields:
+    """Batched (B, M, K) x (B, K, N) product over ``sr`` — one kernel launch
+    for a whole stack of independent problems (the equal-cost sweep driver's
+    hot path: every topology's padded adjacency block rides the leading
+    axis). Same blocking/revisiting scheme as the 2D kernel with the batch
+    index as the outermost grid dimension."""
+    nf = sr.num_fields
+    assert len(a) == nf and len(b) == nf, (len(a), len(b), nf)
+    nb, m, k = a[0].shape
+    nb2, k2, n = b[0].shape
+    assert nb == nb2 and k == k2, (a[0].shape, b[0].shape)
+    assert all(x.shape == (nb, m, k) for x in a)
+    assert all(x.shape == (nb, k, n) for x in b)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (a[0].shape, b[0].shape, (bm, bn, bk))
+    assert bk % sub_k == 0
+    grid = (nb, m // bm, n // bn, k // bk)
+    a_spec = pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk))
+    b_spec = pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j))
+    o_spec = pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j))
+    out_shape = [jax.ShapeDtypeStruct((nb, m, n), x.dtype) for x in a]
+
+    if sr.mxu:
+        kernel = functools.partial(_mxu_kernel_batched, sr=sr,
+                                   k_blocks=grid[3])
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    else:
+        kernel = functools.partial(_vpu_kernel_batched, sr=sr, sub_k=sub_k)
         scratch = []
 
     out = pl.pallas_call(

@@ -1,0 +1,118 @@
+"""Cost/power model sanity + spec-driven sizer (by_cost / by_radix) tests."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel as C
+from repro.core import topology as T
+
+FAMILIES_WITH_SIZERS = sorted(T.families())
+
+
+# -- model sanity -------------------------------------------------------------
+
+def test_optical_costs_more_than_electrical_at_dc_lengths():
+    """Optical pays the transceiver premium at every data-center length;
+    the crossover sits beyond ~20 m."""
+    for length in (0.5, 2.0, 10.0, 20.0):
+        assert C.cable_cost(length, "optical") > C.cable_cost(length, "electrical")
+    p = C.DEFAULT_PARAMS
+    crossover = (p.opt_base - p.elec_base) / (p.elec_per_m - p.opt_per_m)
+    assert C.cable_cost(2 * crossover, "optical") < C.cable_cost(
+        2 * crossover, "electrical")
+
+
+def test_cable_cost_increases_with_length():
+    for medium in ("electrical", "optical"):
+        costs = [C.cable_cost(length, medium) for length in (1, 5, 25, 100)]
+        assert all(a < b for a, b in zip(costs, costs[1:]))
+
+
+def test_router_cost_and_power_increase_with_radix():
+    radii = [8, 16, 32, 64, 128]
+    costs = [C.router_cost(k) for k in radii]
+    power = [C.router_power(k) for k in radii]
+    assert all(a < b for a, b in zip(costs, costs[1:]))
+    assert all(a < b for a, b in zip(power, power[1:]))
+    # crossbar term makes per-port cost superlinear
+    assert costs[-1] / radii[-1] > costs[0] / radii[0]
+
+
+def test_unknown_medium_rejected():
+    with pytest.raises(ValueError):
+        C.cable_cost(1.0, "quantum")
+
+
+@pytest.mark.parametrize("fam", FAMILIES_WITH_SIZERS)
+def test_cost_report_consistent(fam):
+    """Breakdown sums to totals and covers the whole link inventory."""
+    spec = T.spec(fam, **T.ladder_params(fam, 2))
+    rep = C.cost_report(spec)
+    assert rep["cost_total"] > 0 and rep["power_total_w"] > 0
+    np.testing.assert_allclose(
+        rep["cost_total"],
+        rep["cost_routers"] + rep["cost_cables_electrical"]
+        + rep["cost_cables_optical"] + rep["cost_endpoints"])
+    np.testing.assert_allclose(
+        rep["power_total_w"], rep["power_routers_w"] + rep["power_nics_w"])
+    assert rep["cables_electrical"] + rep["cables_optical"] == spec.n_links
+    assert rep["power_nics_w"] == spec.n_servers * C.DEFAULT_PARAMS.nic_w
+
+
+def test_cost_increases_along_every_ladder():
+    """Bigger configurations of one family must never get cheaper — the
+    property by_cost's max_under search relies on."""
+    for fam in FAMILIES_WITH_SIZERS:
+        costs = [C.cost_report(T.spec(fam, **T.ladder_params(fam, i)))
+                 ["cost_total"] for i in range(4)]
+        assert all(a < b for a, b in zip(costs, costs[1:])), (fam, costs)
+
+
+# -- spec-driven sizers -------------------------------------------------------
+
+@pytest.mark.parametrize("fam", ["slimfly", "polarfly", "oft", "megafly",
+                                 "hammingmesh", "fattree"])
+def test_by_cost_monotone_and_within_budget(fam):
+    budgets = [2e6, 8e6, 40e6]
+    prev = -1.0
+    for budget in budgets:
+        params = T.by_cost(fam, budget, params_only=True)
+        cost = C.cost_report(T.spec(fam, **params))["cost_total"]
+        assert cost <= budget, (fam, budget, cost)
+        assert cost >= prev, f"{fam}: larger budget bought a smaller system"
+        prev = cost
+
+
+@pytest.mark.parametrize("fam", ["slimfly", "polarfly", "dragonfly",
+                                 "fattree", "hyperx"])
+def test_by_radix_monotone_and_within_radix(fam):
+    prev = -1
+    for radix in (24, 48, 96):
+        params = T.by_radix(fam, radix, params_only=True)
+        s = T.spec(fam, **params)
+        assert s.router_radix <= radix, (fam, radix, s.router_radix)
+        assert s.n_servers >= prev, (
+            f"{fam}: larger port budget bought a smaller system")
+        prev = s.n_servers
+
+
+def test_by_radix_flat_family_bounded_by_servers():
+    """Torus radix never grows, so the server cap must bound the search."""
+    g_small = T.by_radix("torus", 16, max_servers=500, params_only=True)
+    g_big = T.by_radix("torus", 16, max_servers=5000, params_only=True)
+    s_small = T.spec("torus", **g_small)
+    s_big = T.spec("torus", **g_big)
+    assert s_small.n_servers <= 500 < s_big.n_servers <= 5000
+
+
+def test_by_cost_budget_too_small_raises():
+    with pytest.raises(ValueError):
+        T.by_cost("oft", 1000.0, params_only=True)
+
+
+def test_by_servers_1m_within_10_percent():
+    """The scalability benchmark's sizing contract at the 1M-server point
+    (cheap: specs only, no graphs built)."""
+    for fam in FAMILIES_WITH_SIZERS:
+        params = T.solve(fam, lambda s: s.n_servers, 1_000_000, "closest")
+        servers = T.spec(fam, **params).n_servers
+        assert abs(servers - 1_000_000) <= 100_000, (fam, servers)

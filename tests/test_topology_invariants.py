@@ -1,7 +1,7 @@
 """Generator invariant suite: degree sequence, connectivity, and the
-`meta`-declared diameter checked against BFS ground truth for every family
-(satellite of the routing PR: routing correctness rests on these graphs
-being what their generators claim)."""
+`meta`/spec-declared diameter checked against BFS ground truth for every
+family (the spec-driven pipeline rests on these closed forms being what
+the generators actually build)."""
 import numpy as np
 import pytest
 
@@ -15,7 +15,7 @@ def _bfs_diameter(g):
     return int(d.max())
 
 
-# family -> (params, expected degree multiset builder)
+# family -> construction params for a small instance
 CASES = {
     "slimfly": dict(q=5),
     "dragonfly": dict(h=2),
@@ -24,7 +24,15 @@ CASES = {
     "torus": dict(dims=(3, 4)),
     "xpander": dict(r=6, lifts=3),
     "jellyfish": dict(n=24, r=5, seed=1),
+    "polarfly": dict(q=5),
+    "oft": dict(q=5),
+    "megafly": dict(m=2),
+    "hammingmesh": dict(a=3, b=2, x=2, y=2),
 }
+
+#: families whose router-graph diameter has no closed form (random wiring,
+#: or arrangement-dependent spine detours for megafly)
+NO_DIAMETER = ("xpander", "jellyfish", "megafly")
 
 
 def _expected_degrees(fam, params, g):
@@ -49,6 +57,24 @@ def _expected_degrees(fam, params, g):
         return np.full(g.n, params["r"])
     if fam == "jellyfish":
         return np.full(g.n, params["r"])
+    if fam == "polarfly":
+        q = params["q"]
+        # q + 1 self-orthogonal (quadric) points at degree q, rest q + 1
+        return np.array(sorted([q] * (q + 1)
+                               + [q + 1] * (g.n - (q + 1))))
+    if fam == "oft":
+        return np.full(g.n, params["q"] + 1)  # (q+1)-regular incidence graph
+    if fam == "megafly":
+        m = params["m"]
+        return np.array(sorted([m] * (g.n // 2)          # leaves
+                               + [2 * m] * (g.n // 2)))  # spines: m + h
+    if fam == "hammingmesh":
+        a, b, x, y = (params[k] for k in "abxy")
+        i, j = np.meshgrid(np.arange(a), np.arange(b), indexing="ij")
+        mesh = ((i > 0).astype(int) + (i < a - 1) + (j > 0) + (j < b - 1))
+        chips = np.tile(mesh.ravel() + 2, x * y)  # +row +col switch ports
+        return np.array(sorted(chips.tolist()
+                               + [x * b] * (a * y) + [y * a] * (b * x)))
     raise AssertionError(fam)
 
 
@@ -68,7 +94,7 @@ def test_generator_invariants(fam):
         assert g.meta["diameter"] == bfs_diam, (
             f"{fam}: meta diameter {g.meta['diameter']} != BFS {bfs_diam}")
     else:
-        assert fam in ("xpander", "jellyfish"), (
+        assert fam in NO_DIAMETER, (
             f"{fam} should declare its diameter in meta")
 
 
@@ -78,6 +104,38 @@ def test_generator_edges_canonical(fam):
     e = g.edges
     assert (e[:, 0] < e[:, 1]).all(), "edges must be canonicalized u < v"
     assert len(np.unique(e, axis=0)) == len(e), "no duplicate links"
+
+
+@pytest.mark.parametrize("fam", sorted(CASES))
+def test_spec_matches_built_graph(fam):
+    """The closed-form TopologySpec must describe the realized graph."""
+    g = T.make(fam, **CASES[fam])
+    s = g.spec
+    assert s is not None and s.family == fam
+    assert s.n_routers == g.n
+    assert s.n_servers == g.num_servers
+    assert s.network_radix == g.network_radix
+    assert s.n_links == g.num_edges, "link classes must cover every cable"
+    assert all(lc.count >= 0 and lc.length_m > 0 for lc in s.link_classes)
+    if s.expected_diameter is not None:
+        assert s.expected_diameter == _bfs_diameter(g)
+    # radix histogram accounting: total ports = 2 * links + server ports
+    ports = sum(r * c for r, c in s.radix_counts)
+    assert ports == 2 * s.n_links + s.n_servers, (
+        f"{fam}: radix_counts ports {ports} != "
+        f"{2 * s.n_links + s.n_servers}")
+    # spec without building agrees with the attached spec
+    assert T.spec(fam, **CASES[fam]).n_links == s.n_links
+
+
+def test_megafly_leaf_diameter():
+    """The Dragonfly+ closed form that *is* invariant: any two leaves are
+    within 3 hops (leaf, owning spine, remote spine, leaf)."""
+    for m in (2, 3):
+        g = T.make("megafly", m=m)
+        d = bfs_distances(g, np.arange(g.n))
+        leaf = (np.arange(g.n) % (2 * m)) < m
+        assert d[np.ix_(leaf, leaf)].max() == g.meta["leaf_diameter"] == 3
 
 
 def test_hypercube_invariants():
