@@ -1,12 +1,19 @@
 """Benchmark harness — one bench per paper table/figure.
 
   python -m benchmarks.run [--quick] [--only generation,analysis,...]
+  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_4.json
 
   generation   Table-1 analogue: 10k/100k/1M-server generation scalability
   analysis     Table-2 analogue: per-metric analysis cost
   collectives  Fig-1 analogue: topology comparison under collective/traffic load
   kernels      Pallas kernel sweep + VMEM working sets
   roofline     the 40-cell dry-run roofline table (reads experiments/dryrun)
+
+``--baseline`` runs the headline device-resident-vs-host-loop comparison
+(`bench_analysis.baseline`) and writes the repo-root ``BENCH_4.json``
+trajectory artifact (single-graph analyze, sweep chain, throughput rounds,
+with speedups over the host-looped reference) that CI uploads per run, so
+future PRs have a fixed-size perf trajectory to compare against.
 """
 from __future__ import annotations
 
@@ -34,7 +41,17 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--baseline", action="store_true",
+                    help="perf-trajectory summary -> repo-root BENCH_4.json")
     args = ap.parse_args()
+    if args.baseline:
+        summary = bench_analysis.baseline(quick=args.quick)
+        summary["tier"] = "perf-trajectory"
+        path = OUT.parents[1] / "BENCH_4.json"
+        path.write_text(json.dumps(summary, indent=1) + "\n")
+        print(json.dumps(summary, indent=1))
+        print(f"[baseline] wrote {path}")
+        return
     names = list(BENCHES) if not args.only else args.only.split(",")
     OUT.mkdir(parents=True, exist_ok=True)
     for name in names:

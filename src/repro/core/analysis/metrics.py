@@ -71,15 +71,38 @@ class AnalysisEngine:
     # -- stage accessors (raw arrays) -------------------------------------
 
     def distances(self) -> np.ndarray:
-        """(n, n) float32 hop distances (exact mode) or sampled BFS rows."""
+        """(n, n) float32 hop distances (exact mode) or sampled BFS rows.
+
+        The kernel path runs the device-resident wavefront engine once,
+        which yields shortest-path multiplicities together with the
+        distances — both land in the cache, so the comparison stage never
+        recomputes them.
+        """
         if "dist" not in self._cache:
-            if self.exact:
-                self._cache["dist"] = apsp_dense(
-                    self.g, use_kernel=self.use_kernel)
+            if self.exact and self.use_kernel:
+                from .wavefront import wavefront_dist_mult
+
+                dist, mult = wavefront_dist_mult(
+                    self.g.adjacency_dense(np.float32))
+                self._cache["dist"], self._cache["mult"] = dist, mult
+            elif self.exact:
+                self._cache["dist"] = apsp_dense(self.g, use_kernel=False)
             else:
                 self._cache["dist"] = sampled_distances(
                     self.g, n_sources=self.n_sources, seed=self.seed)
         return self._cache["dist"]
+
+    def shortest_path_mult(self) -> np.ndarray:
+        """(n, n) exact shortest-path multiplicities over the shared APSP."""
+        if not self.exact:
+            raise ValueError("multiplicity needs the dense APSP result")
+        if "mult" not in self._cache:
+            from .paths import shortest_path_multiplicity
+
+            _, mult = shortest_path_multiplicity(
+                self.g, self.distances(), use_kernel=self.use_kernel)
+            self._cache["mult"] = mult
+        return self._cache["mult"]
 
     def multiplicities(self) -> Dict[str, np.ndarray]:
         """Exact per-pair simple-path counts at slack 0 / +1 / +2."""
@@ -135,11 +158,9 @@ class AnalysisEngine:
         if "comparison" not in self._cache:
             from ..routing.assign import ecmp_all_pairs_loads
             from ..costmodel import cost_report
-            from .paths import shortest_path_multiplicity
 
             dist = self.distances()
-            _, mult = shortest_path_multiplicity(
-                self.g, dist, use_kernel=self.use_kernel)
+            mult = self.shortest_path_mult()
             adj = self.g.adjacency_dense(np.float64)
             loads = ecmp_all_pairs_loads(dist, mult, adj,
                                          use_kernel=self.use_kernel)

@@ -6,11 +6,13 @@ non-minimal simple paths at +1 and +2 length slack, and how much the
 shortest-path sets of different demands interfere on links. All of it
 reduces to semiring matmuls (`repro.kernels.semiring`):
 
-* multiplicity: either one fused tropical-with-count relaxation sweep
-  (``X <- X (x) B`` over (dist, count) pairs, diagonal pinned to (0, 1)),
-  or — when a distance matrix is already available — Brandes' frontier
-  identity ``sigma(i,j) = sum_{u in N(j), d(i,u)=d(i,j)-1} sigma(i,u)``
-  evaluated as one masked counting matmul per BFS level.
+* multiplicity: Brandes' frontier identity
+  ``sigma(i,j) = sum_{u in N(j), d(i,u)=d(i,j)-1} sigma(i,u)`` — by default
+  through the device-resident wavefront engine (`analysis.wavefront`: the
+  whole level loop inside one jitted `lax.while_loop`), or as one masked
+  counting matmul per BFS level when a distance matrix is already
+  available. The retired fused tropical-count relaxation
+  (:func:`tropical_count_relaxation`) stays as the kernel-path oracle.
 * slack counts: walks of length d+1 are always simple paths (a revisit
   would shorten the walk below d); walks of length d+2 are simple paths
   plus exactly the "shortest path with one bounce v->x->v inserted" walks.
@@ -36,7 +38,8 @@ import numpy as np
 from ..graph import Graph
 
 __all__ = [
-    "shortest_path_multiplicity", "path_counts_with_slack",
+    "shortest_path_multiplicity", "tropical_count_relaxation",
+    "path_counts_with_slack",
     "pair_edge_loads", "edge_interference", "brute_force_path_counts",
 ]
 
@@ -82,34 +85,53 @@ def shortest_path_multiplicity(
 
     With ``dist`` given (the shared APSP result), runs one masked counting
     matmul per BFS level (MXU path). Without it, the kernel path runs the
-    fused tropical-with-count relaxation, producing both matrices in one
-    sweep: after k steps the pair matrix is exact for all pairs at distance
-    <= k, so ``diameter`` steps converge. ``use_kernel=False`` without
-    ``dist`` computes distances by all-sources BFS and takes the masked
-    branch — the jnp pair-product oracle would materialize an (n, n, n)
-    broadcast per step.
+    device-resident wavefront engine (`wavefront.dist_mult_device`),
+    producing both matrices from one jitted level loop — no per-level host
+    round trips. ``use_kernel=False`` without ``dist`` computes distances by
+    all-sources BFS and takes the masked branch — the jnp pair-product
+    oracle would materialize an (n, n, n) broadcast per step. The retired
+    fused tropical-count relaxation survives as
+    :func:`tropical_count_relaxation`, the kernel-path oracle.
 
     Every count the kernel path keeps is a sum of nonnegative terms equal
     to some sigma(i, j), so results are exact iff the largest multiplicity
     fits f32's integer range; past that a RuntimeWarning is emitted.
     """
-    if dist is None and not use_kernel:
+    if dist is None and use_kernel:
+        from .wavefront import wavefront_dist_mult
+
+        # wavefront_dist_mult warns on f32-inexact counts itself
+        return wavefront_dist_mult(g.adjacency_dense(np.float32))
+    if dist is None:
         from .apsp import bfs_distances
 
         d = bfs_distances(g, np.arange(g.n)).astype(np.float32)
         dist = np.where(d < 0, np.float32(np.inf), d)
-    if dist is not None:
-        product = _count_product(use_kernel)
-        a = g.adjacency_dense(np.float32)
-        mult = np.where(dist == 0, np.float32(1), np.float32(0))
-        finite = dist[np.isfinite(dist)]
-        diam = int(finite.max()) if finite.size else 0
-        for level in range(1, diam + 1):
-            frontier = np.where(dist == level - 1, mult, np.float32(0))
-            mult = np.where(dist == level, product(frontier, a), mult)
-        _warn_if_inexact(mult, use_kernel)
-        return np.asarray(dist, np.float32), mult
+    product = _count_product(use_kernel)
+    a = g.adjacency_dense(np.float32)
+    mult = np.where(dist == 0, np.float32(1), np.float32(0))
+    finite = dist[np.isfinite(dist)]
+    diam = int(finite.max()) if finite.size else 0
+    for level in range(1, diam + 1):
+        frontier = np.where(dist == level - 1, mult, np.float32(0))
+        mult = np.where(dist == level, product(frontier, a), mult)
+    _warn_if_inexact(mult, use_kernel)
+    return np.asarray(dist, np.float32), mult
 
+
+def tropical_count_relaxation(g: Graph, use_kernel: bool = True
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused tropical-with-count relaxation — the wavefront engine's oracle.
+
+    ``X <- X (x) B`` over (dist, count) pairs through the fused
+    TROPICAL_COUNT kernel, diagonal re-pinned to (0, 1) each step; after k
+    steps the pair matrix is exact for all pairs at distance <= k, so
+    ``diameter`` steps converge. This was the default kernel path before the
+    device-resident wavefront engine; it is kept verbatim — per-step
+    ``np.array`` copies, host diagonal re-pinning, host convergence check —
+    both as an independent correctness anchor and as the host-loop baseline
+    the perf harness (`benchmarks/run.py --baseline`) measures against.
+    """
     import jax.numpy as jnp
     from ... import kernels
 
@@ -127,9 +149,14 @@ def shortest_path_multiplicity(
 
     bdj, bcj = jnp.asarray(bd), jnp.asarray(bc)  # constant operands: upload once
 
-    def step(xd, xc):
-        return kernels.ops.minplus_count_matmul(
-            jnp.asarray(xd), jnp.asarray(xc), bdj, bcj)
+    if use_kernel:
+        def step(xd, xc):
+            return kernels.ops.minplus_count_matmul(
+                jnp.asarray(xd), jnp.asarray(xc), bdj, bcj)
+    else:
+        def step(xd, xc):
+            return kernels.ref.minplus_count_matmul_ref(
+                jnp.asarray(xd), jnp.asarray(xc), bdj, bcj)
 
     for _ in range(max(1, n - 1)):
         nd, nc = (np.array(x) for x in step(d, c))  # copy: jax buffers are read-only
@@ -139,7 +166,9 @@ def shortest_path_multiplicity(
             d, c = nd, nc
             break
         d, c = nd, nc
-    _warn_if_inexact(c, use_kernel=True)  # the relaxation path is f32
+    # both step functions (kernel AND jnp ref oracle) accumulate counts in
+    # f32, so the exact-integer limit is 2**24 on either path
+    _warn_if_inexact(c, use_kernel=True)
     return d, c
 
 

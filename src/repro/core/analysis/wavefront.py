@@ -1,0 +1,274 @@
+"""Device-resident wavefront engine — the analysis stack's one level loop.
+
+Level-synchronous BFS with Brandes' frontier identity gives hop distances
+AND exact shortest-path multiplicities from one counting product per level
+(``x_k = F_k @ A``; pairs first reached at level k+1 carry sigma = x). Before
+this module, every caller ran that loop on the *host*: download the product,
+`np.where`-mask it, re-upload, and check convergence in Python — one
+device->host->device round trip per BFS level.
+
+Here the **entire level loop runs inside one jitted `jax.lax.while_loop`**:
+frontier expansion (the fused `frontier_step` Pallas primitive — counting
+matmul with the first-reach mask folded into its epilogue), dist/mult
+updates, and the convergence test all stay on device; only the final
+matrices are transferred to host. The same holds for the two other level
+loops in the stack:
+
+* :func:`ecmp_loads_device` — the O(diameter) Brandes dependency
+  accumulation behind the exact ECMP saturation-throughput bound;
+* :func:`squaring_apsp_device` — weighted min-plus squaring with the
+  convergence flag computed on device (the throughput engine's per-round
+  oracle, fed by an on-device scatter of edge lengths into a reused padded
+  buffer).
+
+Everything is shape-specialized and cached: one compiled executable per
+(padded shape, block config), chosen through the kernel autotuner's
+persisted table (`repro.kernels.autotune`). A regression test asserts the
+loop lowers to a single compiled call with zero host transfers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wavefront_dist_mult", "dist_mult_device", "ecmp_loads_device",
+           "squaring_apsp_device", "pad_block", "pad_operand"]
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _interpret_default() -> bool:
+    from ... import kernels
+
+    return kernels.ops.INTERPRET
+
+
+def pad_block(n: int, block: Optional[int] = None,
+              batched: bool = False) -> Tuple[int, int]:
+    """(padded size, block) for an n-router problem: pad to the f32 tile
+    (min 128) and size blocks from the autotune table when unspecified
+    (the ``batched_frontier_step`` entry for stacked problems)."""
+    from ...kernels import autotune
+
+    p = max(128, n + ((-n) % 128))
+    if block is None:
+        op = "batched_frontier_step" if batched else "frontier_step"
+        cfg = autotune.resolve(op, p, p, p)
+        block = cfg["bm"]
+    block = min(block, p)
+    p += (-p) % block
+    return p, block
+
+
+def pad_operand(x: np.ndarray, p: int, fill: float) -> np.ndarray:
+    """Pad the trailing two dims of ``x`` to (p, p) as f32 — the one
+    phantom-router padding helper every device-engine caller shares
+    (fills: adjacency/multiplicity 0, distance +inf)."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[-1]
+    if n == p:
+        return x
+    w = [(0, 0)] * (x.ndim - 2) + [(0, p - n)] * 2
+    return np.pad(x, w, constant_values=np.float32(fill))
+
+
+def _fit_block(p: int, block: Optional[int], batched: bool = False) -> int:
+    """A block size that tiles an already-padded size p (p must be a
+    multiple of the 128-wide f32 tile). Falls back from the tuned choice to
+    128 when the tuned block does not divide p."""
+    if p % 128:
+        raise ValueError(f"operand size {p} is not a multiple of 128 — "
+                         f"pad with pad_block() first")
+    if block is None:
+        _, block = pad_block(p, batched=batched)
+    block = min(block, p)
+    return block if p % block == 0 else 128
+
+
+# -- the jitted engines (cached per padded shape / config) ---------------------
+
+@functools.lru_cache(maxsize=None)
+def _dist_mult_fn(batched: bool, block: int, interpret: bool):
+    from ... import kernels
+
+    step = (kernels.semiring.frontier_step_batched_pallas if batched
+            else kernels.semiring.frontier_step_pallas)
+
+    def run(adj: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        p = adj.shape[-1]
+        eye = jnp.broadcast_to(jnp.eye(p, dtype=jnp.float32), adj.shape)
+        dist0 = jnp.where(eye > 0, 0.0, _INF)
+
+        def cond(state):
+            level, _, _, _, more = state
+            return more & (level <= p)
+
+        def body(state):
+            level, dist, mult, frontier, _ = state
+            x = step(frontier, adj, dist, bm=block, bn=block, bk=block,
+                     interpret=interpret)
+            new = x > 0
+            dist = jnp.where(new, level.astype(jnp.float32), dist)
+            # newly reached pairs carried 0 in mult, so += is the masked set
+            mult = mult + x
+            return level + 1, dist, mult, x, new.any()
+
+        _, dist, mult, _, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(1), dist0, eye, eye, jnp.bool_(True)))
+        return dist, mult
+
+    return jax.jit(run)
+
+
+def dist_mult_device(adj: jnp.ndarray, block: Optional[int] = None,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Hop distances + shortest-path multiplicities, fully on device.
+
+    ``adj`` is a (p, p) or stacked (B, p, p) {0,1} float adjacency whose
+    size is already a multiple of the block (see :func:`pad_block`; padding
+    rows/cols must be zero — isolated phantom routers). Returns device
+    arrays (dist, mult): dist f32 with +inf for unreachable (phantom
+    diagonals included at 0), mult f32 with 1 on the diagonal. One jitted
+    call; the while_loop never leaves the device.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    p = adj.shape[-1]
+    block = _fit_block(p, block, batched=adj.ndim == 3)
+    return _dist_mult_fn(adj.ndim == 3, block, interpret)(adj)
+
+
+def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host convenience wrapper: pad -> device engine -> sliced np arrays.
+
+    Warns (RuntimeWarning) when a multiplicity exceeds f32's exact-integer
+    range — the engine's counts are f32 on device.
+    """
+    from .paths import _warn_if_inexact
+
+    adj = np.asarray(adj, np.float32)
+    n = adj.shape[-1]
+    p, block = pad_block(n, block, batched=adj.ndim == 3)
+    dist, mult = dist_mult_device(jnp.asarray(pad_operand(adj, p, 0.0)),
+                                  block=block)
+    sl = (Ellipsis, slice(None, n), slice(None, n))
+    mult = np.asarray(mult)[sl]
+    _warn_if_inexact(mult, use_kernel=True)
+    return np.asarray(dist)[sl], mult
+
+
+@functools.lru_cache(maxsize=None)
+def _ecmp_fn(batched: bool, block: int, interpret: bool):
+    from ... import kernels
+    from ...kernels.semiring import (COUNTING, semiring_matmul_batched_pallas,
+                                     semiring_matmul_pallas)
+
+    mm = semiring_matmul_batched_pallas if batched else semiring_matmul_pallas
+
+    def count(a, b):
+        (out,) = mm(COUNTING, (a,), (b,), bm=block, bn=block, bk=block,
+                    interpret=interpret)
+        return out
+
+    def run(dist, mult, adj):
+        finite = jnp.isfinite(dist)
+        diam = jnp.max(jnp.where(finite, dist, 0.0)).astype(jnp.int32)
+        sigma_inv = jnp.where(finite & (mult > 0),
+                              1.0 / jnp.where(mult > 0, mult, 1.0), 0.0)
+        zeros = jnp.zeros_like(dist)
+
+        def cond(state):
+            a, _, _ = state
+            return a >= 0
+
+        def body(state):
+            a, delta, acc = state
+            af = a.astype(jnp.float32)
+            z = jnp.where(dist == af + 1.0, (1.0 + delta) * sigma_inv, 0.0)
+            f_a = jnp.where(dist == af, mult, 0.0)
+            acc = acc + count(jnp.swapaxes(f_a, -1, -2), z)
+            delta = jnp.where(dist == af, mult * count(z, adj), delta)
+            return a - 1, delta, acc
+
+        _, _, acc = jax.lax.while_loop(cond, body, (diam - 1, zeros, zeros))
+        return adj * acc
+
+    return jax.jit(run)
+
+
+def ecmp_loads_device(dist: jnp.ndarray, mult: jnp.ndarray, adj: jnp.ndarray,
+                      block: Optional[int] = None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Directed ECMP loads under uniform all-pairs demand, fully on device.
+
+    The O(diameter) Brandes backward accumulation of
+    `routing.assign.ecmp_all_pairs_loads` as one jitted `lax.while_loop` —
+    2 counting products per level with the level masks evaluated on device.
+    Operands must share a (.., p, p) block-multiple shape (phantom padding:
+    dist +inf rows, mult/adj 0). Returns the device (.., p, p) load matrix.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    p = dist.shape[-1]
+    block = _fit_block(p, block, batched=dist.ndim == 3)
+    return _ecmp_fn(dist.ndim == 3, block, interpret)(dist, mult, adj)
+
+
+@functools.lru_cache(maxsize=None)
+def _squaring_fn(block: int, sub_k: int, max_squarings: int, interpret: bool):
+    from ... import kernels
+
+    def run(d: jnp.ndarray) -> jnp.ndarray:
+        def cond(state):
+            i, _, done = state
+            return (~done) & (i < max_squarings)
+
+        def body(state):
+            i, d, _ = state
+            nxt = kernels.minplus.minplus_matmul_pallas(
+                d, d, bm=block, bn=block, bk=block, sub_k=sub_k,
+                interpret=interpret)
+            return i + 1, nxt, jnp.all(nxt == d)
+
+        _, d, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), d, jnp.bool_(False)))
+        return d
+
+    return jax.jit(run)
+
+
+def squaring_apsp_device(d: jnp.ndarray, max_squarings: Optional[int] = None,
+                         block: Optional[int] = None,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Min-plus squaring to convergence with the convergence flag on device.
+
+    For *weighted* length matrices (hop-distance problems should use
+    :func:`dist_mult_device` — squaring costs O(log diam) VPU tropical
+    products, the wavefront costs O(diam) MXU counting products). ``d`` is a
+    (p, p) padded device seed (+inf off-graph, 0 diagonal everywhere
+    including padding). One jitted call, no per-squaring host sync.
+
+    ``max_squarings`` defaults to ceil(log2(p)) — always enough to converge
+    — and is only a safety cap: the loop exits on the device-computed
+    convergence flag, so callers should leave it shape-derived (one compile
+    per padded shape) rather than n-derived.
+    """
+    from ...kernels import autotune
+
+    if interpret is None:
+        interpret = _interpret_default()
+    p = d.shape[-1]
+    if max_squarings is None:
+        max_squarings = max(1, int(np.ceil(np.log2(p))))
+    cfg = autotune.resolve("minplus", p, p, p,
+                           bm=block, bn=block, bk=block)
+    block = cfg["bm"] if p % cfg["bm"] == 0 else 128
+    sub_k = min(cfg["sub_k"], block)
+    return _squaring_fn(block, sub_k, max_squarings, interpret)(d)

@@ -191,13 +191,18 @@ def ecmp_all_pairs_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
     saturation-throughput column affordable inside the sweep driver.
 
     Arrays may carry leading batch dimensions (the sweep's stacked leading
-    axis) as long as ``product`` handles the same stacking; the default
-    product is the 2D counting kernel/oracle from :func:`count_product`.
-    Returns the directed (.., n, n) load matrix; ``1 / loads.max()`` is the
-    exact ECMP lower bound on per-pair saturation throughput (capacity 1
-    per link direction). Tested equal to
+    axis) as long as ``product`` handles the same stacking. The kernel-path
+    default (``product=None, use_kernel=True``) runs the whole accumulation
+    device-resident (`analysis.wavefront.ecmp_loads_device`: one jitted
+    `lax.while_loop`, level masks never materialize on host); passing an
+    explicit ``product`` (or ``use_kernel=False``) takes the host-looped
+    reference path. Returns the directed (.., n, n) load matrix;
+    ``1 / loads.max()`` is the exact ECMP lower bound on per-pair
+    saturation throughput (capacity 1 per link direction). Tested equal to
     ``ecmp_link_loads(demand=all-ones)``.
     """
+    if product is None and use_kernel:
+        return _ecmp_all_pairs_device(dist, mult, adj)
     if product is None:
         product = count_product(use_kernel)
     finite = np.isfinite(dist)
@@ -211,6 +216,23 @@ def ecmp_all_pairs_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
         acc = acc + np.asarray(product(np.swapaxes(f_a, -1, -2), z))
         delta = np.where(dist == a, mult * np.asarray(product(z, adj)), delta)
     return adj * acc
+
+
+def _ecmp_all_pairs_device(dist: np.ndarray, mult: np.ndarray,
+                           adj: np.ndarray) -> np.ndarray:
+    """Pad -> device-resident Brandes accumulation -> sliced host loads."""
+    import jax.numpy as jnp
+
+    from ..analysis.wavefront import ecmp_loads_device, pad_block, pad_operand
+
+    n = np.asarray(dist).shape[-1]
+    p, block = pad_block(n, batched=np.asarray(dist).ndim == 3)
+    loads = ecmp_loads_device(jnp.asarray(pad_operand(dist, p, np.inf)),
+                              jnp.asarray(pad_operand(mult, p, 0.0)),
+                              jnp.asarray(pad_operand(adj, p, 0.0)),
+                              block=block)
+    sl = (Ellipsis, slice(None, n), slice(None, n))
+    return np.asarray(loads)[sl].astype(np.float64)
 
 
 def walk_slack_link_loads(g: Graph, dist: np.ndarray, demand: np.ndarray,

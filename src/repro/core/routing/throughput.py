@@ -8,9 +8,11 @@ the Garg–Könemann / multiplicative-weights recipe:
 1. every directed edge carries a length ``l_e = w_e / c_e`` (weights start
    uniform);
 2. the inner oracle — weighted shortest paths for *all* commodities at once
-   — is one dense min-plus APSP through the tropical Pallas kernel
-   (`analysis.apsp.apsp_from_lengths`), so a round costs O(log n) semiring
-   matmuls regardless of the commodity count;
+   — is one dense min-plus APSP through the tropical Pallas kernel, run
+   **device-resident** (`_device_apsp_solver`: the round's edge lengths are
+   scattered into a reused padded seed on device and the squaring loop with
+   its convergence flag executes as one jitted `lax.while_loop`); a round
+   costs O(log n) semiring matmuls regardless of the commodity count;
 3. every commodity routes its full demand along a current shortest path
    (vectorized greedy successor chase, randomized tie-breaking — no
    per-flow Python loops), edge weights grow as
@@ -86,6 +88,40 @@ def _length_matrix(g: Graph, lengths: np.ndarray) -> np.ndarray:
     return lm
 
 
+def _device_apsp_solver(g: Graph, max_squarings: int):
+    """Per-round weighted-APSP oracle with everything but the greedy chase
+    on device: uploads only the (2E,) length vector each round, scatters it
+    into a reused padded min-plus seed *on device*, and runs the squaring
+    loop with its convergence flag inside one jitted `lax.while_loop`
+    (`analysis.wavefront.squaring_apsp_device`). Returns
+    ``lengths -> (n, n) np.float32 distances``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..analysis.wavefront import pad_block, squaring_apsp_device
+
+    n = g.n
+    p, _ = pad_block(n)
+    src, dst = _directed_edge_index(g)
+    base = np.full((p, p), np.float32(np.inf), np.float32)
+    idx = np.arange(p)
+    base[idx, idx] = 0.0  # padded diagonal stays 0: phantoms never shortcut
+    base_d = jnp.asarray(base)
+    src_d, dst_d = jnp.asarray(src), jnp.asarray(dst)
+
+    @jax.jit
+    def scatter(lengths: jnp.ndarray) -> jnp.ndarray:
+        return base_d.at[src_d, dst_d].set(lengths.astype(jnp.float32))
+
+    def solve(lengths: np.ndarray) -> np.ndarray:
+        lm = scatter(jnp.asarray(lengths, jnp.float32))
+        dist = squaring_apsp_device(lm, max_squarings=max_squarings)
+        return np.asarray(dist)[:n, :n]
+
+    return solve
+
+
 def route_greedy_shortest(g: Graph, length_mat: np.ndarray, dist: np.ndarray,
                           pairs: np.ndarray, amounts: np.ndarray,
                           rng: np.random.Generator,
@@ -154,8 +190,6 @@ def max_concurrent_flow(
       link_loads          (E,) undirected loads of the scaled averaged flow
                           at lambda = throughput
     """
-    from ..analysis.apsp import apsp_from_lengths
-
     if eps <= 0:
         raise ValueError("eps must be positive")
     n = g.n
@@ -185,11 +219,23 @@ def max_concurrent_flow(
     dropped = 0
     converged = False
 
+    max_squarings = max(1, int(np.ceil(np.log2(max(2, n)))))
+    # kernel path: one device solver for all rounds — per round it uploads
+    # only the (2E,) length vector, scatters into a reused padded seed on
+    # device, and runs the squaring loop with its convergence flag on
+    # device (no per-squaring host sync, no per-round (n, n) re-upload)
+    solver = _device_apsp_solver(g, max_squarings) if use_kernel else None
+
     for rounds in range(1, max_rounds + 1):
         lengths = weights / caps
         lengths = np.maximum(lengths, lengths.max() * 1e-12)
         lm = _length_matrix(g, lengths)
-        dist_l = apsp_from_lengths(lm, use_kernel=use_kernel)
+        if solver is not None:
+            dist_l = solver(lengths)
+        else:
+            from ..analysis.apsp import apsp_from_lengths
+
+            dist_l = apsp_from_lengths(lm, use_kernel=False)
 
         if hop_dist is None:  # first round: drop unreachable commodities
             hop_dist = dist_l

@@ -23,8 +23,12 @@ instead of one per topology. Stages:
    lower bound ``lambda >= 1 / max_load`` (capacity 1 per link direction);
 3. `core.costmodel` over each spec -> construction cost and power columns.
 
-Total: 3 x diameter stacked MXU-path products for the whole sweep, with
-the jitted batched kernel traced once for the shared padded shape.
+Total: 3 x diameter stacked MXU-path products for the whole sweep. On the
+kernel path both level loops run **device-resident** (`analysis.wavefront`):
+the padded stack is uploaded once, the BFS wavefront and the Brandes
+accumulation each execute as one jitted `jax.lax.while_loop` (fused
+frontier-step kernel, on-device convergence tests), and only the final
+dist/mult/loads matrices come back to host.
 
 CLI::
 
@@ -149,7 +153,17 @@ def _stack_seeds(graphs: Sequence[Graph]) -> Tuple[np.ndarray, np.ndarray]:
 
 def batched_apsp(graphs: Sequence[Graph], use_kernel: bool = True
                  ) -> np.ndarray:
-    """All-pairs hop distances for a whole stack of topologies at once."""
+    """All-pairs hop distances for a whole stack of topologies at once.
+
+    Kernel path: the device-resident wavefront engine (one jitted level
+    loop for the whole stack). Oracle path: host-looped stacked min-plus
+    squaring (`_apsp_from_stack`).
+    """
+    if use_kernel:
+        from .analysis.wavefront import wavefront_dist_mult
+
+        dist, _ = wavefront_dist_mult(_stack_adjacency(graphs))
+        return dist
     dist, _ = _stack_seeds(graphs)
     return _apsp_from_stack(dist, _batched_minplus(use_kernel))
 
@@ -164,7 +178,7 @@ def _apsp_from_stack(dist: np.ndarray, minplus) -> np.ndarray:
     return dist
 
 
-def batched_dist_mult(adj: np.ndarray, count,
+def batched_dist_mult(adj: np.ndarray, count=None,
                       max_levels: Optional[int] = None):
     """Hop distances AND shortest-path multiplicities from one stacked
     counting product per BFS level (Brandes' frontier identity).
@@ -176,7 +190,21 @@ def batched_dist_mult(adj: np.ndarray, count,
     matmul on the kernel's fast MXU path. Stops as soon as a sweep makes no
     new pair reachable (= max diameter over the stack, +1 to confirm).
     Padding rows are isolated phantoms: their frontier never grows.
+
+    With ``count=None`` the whole loop runs device-resident
+    (`analysis.wavefront.dist_mult_device`) — one jitted `lax.while_loop`,
+    no per-level host masking. Passing an explicit ``count`` product (or a
+    ``max_levels`` cap, which the device engine does not expose) keeps the
+    host-looped reference sweep below (the wavefront engine's batched
+    oracle in the tests).
     """
+    if count is None:
+        if max_levels is None:
+            from .analysis.wavefront import wavefront_dist_mult
+
+            dist, mult = wavefront_dist_mult(adj)
+            return dist, mult.astype(np.float64)
+        count = _batched_count(True)  # capped sweep: host loop, kernel product
     nb, p, _ = adj.shape
     if max_levels is None:
         max_levels = p
@@ -216,12 +244,33 @@ def sweep(families: Optional[Sequence[str]] = None,
         graphs, budget = equal_cost_graphs(families, budget, ref, max_routers)
     if not graphs:
         raise ValueError("sweep has no topologies to compare")
-    count = _batched_count(use_kernel)
 
     adj = _stack_adjacency(graphs)
-    dist, mult = batched_dist_mult(adj, count)
-    loads = (ecmp_all_pairs_loads(dist, mult, adj, product=count)
-             if throughput else None)
+    if use_kernel:
+        # device-resident chain: upload the padded stack once, run the
+        # wavefront level loop AND the Brandes accumulation on device, and
+        # transfer only the three final matrices back to host
+        import jax.numpy as jnp
+
+        from .analysis import wavefront as WF
+
+        k = adj.shape[-1]
+        p, block = WF.pad_block(k, batched=True)
+        adj_d = jnp.asarray(WF.pad_operand(adj, p, 0.0))
+        dist_d, mult_d = WF.dist_mult_device(adj_d, block=block)
+        loads_d = (WF.ecmp_loads_device(dist_d, mult_d, adj_d, block=block)
+                   if throughput else None)
+        dist = np.asarray(dist_d)[:, :k, :k]
+        mult = np.asarray(mult_d)[:, :k, :k].astype(np.float64)
+        loads = (np.asarray(loads_d)[:, :k, :k] if throughput else None)
+        from .analysis.paths import _warn_if_inexact
+
+        _warn_if_inexact(mult, use_kernel=True)  # device counts are f32
+    else:
+        count = _batched_count(use_kernel)
+        dist, mult = batched_dist_mult(adj, count)
+        loads = (ecmp_all_pairs_loads(dist, mult, adj, product=count)
+                 if throughput else None)
 
     rows = []
     for i, g in enumerate(graphs):

@@ -5,4 +5,4 @@ scaffolding + `Semiring` algebra specs), <name>.py modules are thin
 instantiations, ops.py is the jit'd wrapper layer with padding +
 interpret-mode dispatch, ref.py holds the pure-jnp oracles.
 """
-from . import ops, ref, semiring  # noqa: F401
+from . import autotune, ops, ref, semiring  # noqa: F401

@@ -1,0 +1,231 @@
+"""Block-shape / sub_k autotuner for the Pallas semiring ops.
+
+The semiring kernels expose (bm, bn, bk) block shapes (and ``sub_k`` slab
+width on the VPU path) as free parameters; the best choice depends on the
+problem size and the backend (interpret-mode CPU here, Mosaic on real TPU).
+This module owns one small mechanism:
+
+* a **persisted tuning table** — JSON mapping ``op -> shape bucket ->
+  config``. A checked-in default (`tuning_table.json`, tuned on this
+  container) ships with the package; a user table (``$REPRO_TUNE_TABLE``,
+  default ``~/.cache/repro/tuning_table.json``) overlays it, so re-tuned
+  entries persist across processes without touching the repo.
+* :func:`resolve` — the ops-layer hook: explicit keyword arguments always
+  win, anything left unspecified comes from the table (falling back to the
+  op's registered default config).
+* :func:`autotune` — time a list of candidate configs on a given shape and
+  persist the winner into the user table. ``python -m repro.kernels.autotune
+  --op frontier_step --size 1024`` from the CLI.
+
+Shapes are bucketed to the next power of two (min 128) per dimension, so one
+tuned entry covers the whole padded-size neighbourhood the wavefront engine
+actually runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+from typing import Dict, Iterable, List, Optional
+
+__all__ = ["resolve", "autotune", "shape_key", "load_table", "save_entry",
+           "DEFAULTS", "CANDIDATES"]
+
+#: per-op fallback configs (also the legacy defaults of the ops layer)
+DEFAULTS: Dict[str, Dict[str, int]] = {
+    "minplus": {"bm": 128, "bn": 128, "bk": 128, "sub_k": 8},
+    "minplus_count": {"bm": 128, "bn": 128, "bk": 128, "sub_k": 8},
+    "count": {"bm": 128, "bn": 128, "bk": 128},
+    "boolean": {"bm": 128, "bn": 128, "bk": 128},
+    "frontier_step": {"bm": 128, "bn": 128, "bk": 128},
+    "batched_minplus": {"bm": 256, "bn": 256, "bk": 256, "sub_k": 8},
+    "batched_count": {"bm": 256, "bn": 256, "bk": 256},
+    "batched_frontier_step": {"bm": 256, "bn": 256, "bk": 256},
+}
+
+#: candidate grids the CLI sweeps (block shapes must tile (8, 128) f32)
+CANDIDATES: Dict[str, List[Dict[str, int]]] = {
+    "frontier_step": [
+        {"bm": b, "bn": b, "bk": b} for b in (128, 256, 512)
+    ],
+    "batched_frontier_step": [
+        {"bm": b, "bn": b, "bk": b} for b in (128, 256, 512)
+    ],
+    "count": [{"bm": b, "bn": b, "bk": b} for b in (128, 256, 512)],
+    "boolean": [{"bm": b, "bn": b, "bk": b} for b in (128, 256, 512)],
+    "minplus": [
+        {"bm": b, "bn": b, "bk": b, "sub_k": s}
+        for b in (128, 256) for s in (8, 16, 32)
+    ],
+    "minplus_count": [
+        {"bm": b, "bn": b, "bk": b, "sub_k": s}
+        for b in (128, 256) for s in (8, 16, 32)
+    ],
+}
+
+_SHIPPED = pathlib.Path(__file__).with_name("tuning_table.json")
+
+
+def _user_table_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_TUNE_TABLE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "tuning_table.json"
+
+
+def _read_json(path: pathlib.Path) -> Dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def shape_key(m: int, n: int, k: int) -> str:
+    """Bucket a problem shape: each dim rounds up to a power of two >= 128."""
+
+    def bucket(x: int) -> int:
+        b = 128
+        while b < x:
+            b *= 2
+        return b
+
+    return f"{bucket(m)}x{bucket(n)}x{bucket(k)}"
+
+
+_TABLE_CACHE: Optional[Dict] = None
+
+
+def load_table(refresh: bool = False) -> Dict[str, Dict[str, Dict[str, int]]]:
+    """Shipped table overlaid with the user table (user entries win).
+
+    Cached in-process (the ops layer consults it on every call); refreshed
+    after :func:`save_entry` or on ``refresh=True``.
+    """
+    global _TABLE_CACHE
+    if _TABLE_CACHE is None or refresh:
+        table = _read_json(_SHIPPED)
+        for op, entries in _read_json(_user_table_path()).items():
+            table.setdefault(op, {}).update(entries)
+        _TABLE_CACHE = table
+    return _TABLE_CACHE
+
+
+def save_entry(op: str, key: str, config: Dict[str, int]) -> pathlib.Path:
+    """Persist one tuned entry into the user table."""
+    global _TABLE_CACHE
+    path = _user_table_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    table = _read_json(path)
+    table.setdefault(op, {})[key] = dict(config)
+    path.write_text(json.dumps(table, indent=1, sort_keys=True) + "\n")
+    _TABLE_CACHE = None
+    return path
+
+
+def resolve(op: str, m: int, n: int, k: int, **overrides) -> Dict[str, int]:
+    """Final config for one op call: overrides > tuned table > op default.
+
+    Only keys the op's default config carries are returned, so VPU-only
+    knobs (``sub_k``) never leak into MXU-path calls. Block shapes are
+    clamped to the bucketed problem size (a 512-wide tile is useless on a
+    256-wide padded matrix).
+    """
+    cfg = dict(DEFAULTS[op])
+    tuned = load_table().get(op, {}).get(shape_key(m, n, k))
+    if tuned:
+        cfg.update({kk: vv for kk, vv in tuned.items() if kk in cfg})
+    cfg.update({kk: vv for kk, vv in overrides.items()
+                if kk in cfg and vv is not None})
+    bucket = [int(s) for s in shape_key(m, n, k).split("x")]
+    for dim, limit in zip(("bm", "bn", "bk"), bucket):
+        cfg[dim] = min(cfg[dim], limit)
+    if "sub_k" in cfg:
+        cfg["sub_k"] = min(cfg["sub_k"], cfg["bk"])
+    return cfg
+
+
+def _bench_once(fn, *args) -> float:
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def autotune(op: str, size: int, batch: int = 0,
+             candidates: Optional[Iterable[Dict[str, int]]] = None,
+             persist: bool = True) -> Dict[str, int]:
+    """Time candidate configs for ``op`` at a square (size, size) problem
+    (optionally stacked ``batch`` deep) and persist the winner."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from . import ops
+
+    rng = np.random.default_rng(0)
+    shape = (batch, size, size) if batch else (size, size)
+    a = jnp.asarray((rng.random(shape) < 0.05).astype(np.float32))
+    d = jnp.asarray(np.where(np.eye(size, dtype=bool), 0.0,
+                             np.inf).astype(np.float32))
+    if batch:
+        d = jnp.broadcast_to(d, shape)
+
+    runners = {
+        "minplus": lambda cfg: ops.minplus_matmul(a, a, **cfg),
+        "minplus_count": lambda cfg: ops.minplus_count_matmul(d, a, d, a,
+                                                              **cfg),
+        "count": lambda cfg: ops.count_matmul(a, a, **cfg),
+        "boolean": lambda cfg: ops.reachability_step(a, a, **cfg),
+        "frontier_step": lambda cfg: ops.frontier_step(a, a, d, **cfg),
+        "batched_minplus": lambda cfg: ops.batched_minplus_matmul(a, a, **cfg),
+        "batched_count": lambda cfg: ops.batched_count_matmul(a, a, **cfg),
+        "batched_frontier_step":
+            lambda cfg: ops.batched_frontier_step(a, a, d, **cfg),
+    }
+    if op not in runners:
+        raise ValueError(f"unknown autotune op {op!r}")
+    cands = list(candidates if candidates is not None
+                 else CANDIDATES.get(op, [DEFAULTS[op]]))
+    best_cfg, best_t = None, float("inf")
+    for cand in cands:
+        cfg = {kk: vv for kk, vv in cand.items() if kk in DEFAULTS[op]}
+        if any(cfg.get(dim, 128) > size for dim in ("bm", "bn", "bk")):
+            continue
+        try:
+            dt = _bench_once(lambda c=cfg: runners[op](c))
+        except Exception:  # noqa: BLE001 - an invalid tile is just skipped
+            continue
+        if dt < best_t:
+            best_cfg, best_t = cfg, dt
+    if best_cfg is None:
+        raise RuntimeError(f"no candidate config ran for {op} at {size}")
+    key = shape_key(*(shape[-2], shape[-1], shape[-1]))
+    if persist:
+        save_entry(op, key, best_cfg)
+    return dict(best_cfg, key=key, seconds=round(best_t, 4))
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--op", default="frontier_step",
+                    help=f"one of {sorted(CANDIDATES)}")
+    ap.add_argument("--size", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--no-persist", action="store_true")
+    args = ap.parse_args(argv)
+    res = autotune(args.op, args.size, batch=args.batch,
+                   persist=not args.no_persist)
+    print(f"[autotune] {args.op} @ {res.pop('key')}: best {res}")
+    if not args.no_persist:
+        print(f"[autotune] persisted to {_user_table_path()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

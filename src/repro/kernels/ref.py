@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "minplus_matmul_ref", "reachability_step_ref", "value_histogram_ref",
-    "count_matmul_ref", "minplus_count_matmul_ref",
+    "count_matmul_ref", "minplus_count_matmul_ref", "frontier_step_ref",
     "batched_minplus_matmul_ref", "batched_count_matmul_ref",
 ]
 
@@ -47,6 +47,15 @@ def minplus_count_matmul_ref(da: jnp.ndarray, ca: jnp.ndarray,
     prod = ca[:, :, None] * cb[None, :, :]
     c = jnp.sum(jnp.where(s == d[:, None, :], prod, 0.0), axis=1)
     return d, c
+
+
+def frontier_step_ref(f: jnp.ndarray, a: jnp.ndarray,
+                      d: jnp.ndarray) -> jnp.ndarray:
+    """Fused wavefront step oracle: the counting product masked to pairs
+    that are newly reached (positive count, dist still +inf). Works on 2D
+    operands and on stacks with a leading batch axis."""
+    x = jnp.matmul(f.astype(jnp.float32), a.astype(jnp.float32))
+    return jnp.where((x > 0) & (d == jnp.inf), x, 0.0)
 
 
 def batched_minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

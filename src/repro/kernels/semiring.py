@@ -34,6 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "Semiring", "semiring_matmul_pallas", "semiring_matmul_batched_pallas",
+    "frontier_step_pallas", "frontier_step_batched_pallas",
     "TROPICAL", "BOOLEAN", "COUNTING", "TROPICAL_COUNT",
 ]
 
@@ -174,6 +175,109 @@ def _mxu_kernel_batched(a_ref, b_ref, o_ref, acc_ref, *, sr: Semiring,
     @pl.when(pl.program_id(3) == k_blocks - 1)
     def _epilogue():
         o_ref[...] = sr.epilogue(acc_ref[...]).astype(o_ref.dtype)[None]
+
+
+def _frontier_kernel(f_ref, a_ref, d_ref, o_ref, acc_ref, *, k_blocks: int):
+    """Fused BFS frontier step: counting product + first-reach mask.
+
+    Accumulates ``F @ A`` in VMEM like the MXU counting kernel, then the
+    epilogue keeps only entries that are newly reached — positive count AND
+    still unreached (dist == +inf) — so the per-level ``dist == level``
+    selects never materialize outside the kernel. The dist block is a plain
+    input read once, at the last K step.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        f_ref[...], a_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_blocks - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        new = (acc > 0.0) & (d_ref[...] == jnp.inf)
+        o_ref[...] = jnp.where(new, acc, 0.0).astype(o_ref.dtype)
+
+
+def _frontier_kernel_batched(f_ref, a_ref, d_ref, o_ref, acc_ref, *,
+                             k_blocks: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        f_ref[0], a_ref[0],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == k_blocks - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        new = (acc > 0.0) & (d_ref[0] == jnp.inf)
+        o_ref[...] = jnp.where(new, acc, 0.0).astype(o_ref.dtype)[None]
+
+
+def frontier_step_pallas(f: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray, *,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """One fused wavefront step: ``where((F@A > 0) & (D == inf), F@A, 0)``.
+
+    ``f`` is the (M, K) level-k multiplicity frontier, ``a`` the (K, N)
+    adjacency, ``d`` the (M, N) running distance matrix (+inf = unreached).
+    Returns the masked level-(k+1) frontier — exactly the newly-reached
+    pairs with their shortest-path multiplicities. M, N, K must divide into
+    blocks (the wavefront engine pre-pads once and reuses the buffers).
+    """
+    m, k = f.shape
+    k2, n = a.shape
+    assert k == k2 and d.shape == (m, n), (f.shape, a.shape, d.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (f.shape, a.shape, (bm, bn, bk))
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel, k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(f, a, d)
+
+
+def frontier_step_batched_pallas(f: jnp.ndarray, a: jnp.ndarray,
+                                 d: jnp.ndarray, *,
+                                 bm: int = 128, bn: int = 128, bk: int = 128,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Stacked fused wavefront step over a leading batch axis (B, M, N)."""
+    nb, m, k = f.shape
+    nb2, k2, n = a.shape
+    assert nb == nb2 and k == k2 and d.shape == (nb, m, n), \
+        (f.shape, a.shape, d.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (f.shape, a.shape, (bm, bn, bk))
+    grid = (nb, m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel_batched, k_blocks=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+            pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(f, a, d)
 
 
 # -- entry point --------------------------------------------------------------

@@ -82,11 +82,19 @@ def test_by_cost_monotone_and_within_budget(fam):
         prev = cost
 
 
-@pytest.mark.parametrize("fam", ["slimfly", "polarfly", "dragonfly",
-                                 "fattree", "hyperx"])
+@pytest.mark.parametrize("fam", [
+    "slimfly", "polarfly",
+    # the dragonfly ladder is a 10s+ closed-form search even at radix 48;
+    # its sizer stays covered in the slow suite
+    pytest.param("dragonfly", marks=pytest.mark.slow),
+    "fattree", "hyperx",
+])
 def test_by_radix_monotone_and_within_radix(fam):
+    # two budget points check both the cap and the monotonicity; radix 96
+    # made some ladders (dragonfly) a 15s+ closed-form search for no extra
+    # coverage
     prev = -1
-    for radix in (24, 48, 96):
+    for radix in (24, 48):
         params = T.by_radix(fam, radix, params_only=True)
         s = T.spec(fam, **params)
         assert s.router_radix <= radix, (fam, radix, s.router_radix)

@@ -103,9 +103,12 @@ def test_matches_closed_form_within_eps(g, opt):
 
 @pytest.mark.parametrize("g", [
     T.make("torus", dims=(3, 3)),
-    T.make("jellyfish", n=10, r=3, seed=2),
+    # the jellyfish instance converges slowly at eps=0.05: hundreds of MWU
+    # rounds against the HiGHS LP — a soak test, not a tier-1 check
+    pytest.param(T.make("jellyfish", n=10, r=3, seed=2),
+                 marks=pytest.mark.slow),
     _star(5),
-], ids=lambda g: g.name)
+], ids=lambda g: getattr(g, "name", None) or g.values[0].name)
 def test_matches_lp_oracle_within_eps(g):
     dist = apsp_dense(g, use_kernel=False)
     demand = R.concurrent_flow_demand(g, dist, "all-pairs")

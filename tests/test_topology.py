@@ -22,7 +22,7 @@ def test_torus_3d():
 
 
 def test_hypercube_diameter_equals_dim():
-    for dim in (3, 5, 7):
+    for dim in (3, 5, 6):
         g = T.make("hypercube", dim=dim)
         assert g.n == 2 ** dim
         assert (g.degrees() == dim).all()
@@ -30,7 +30,12 @@ def test_hypercube_diameter_equals_dim():
         assert rep["diameter"] == dim
 
 
-@pytest.mark.parametrize("q", [5, 13, 17, 29])
+@pytest.mark.parametrize("q", [
+    5, 13, 17,
+    # q=29 is 1682 routers: the full analyze() sweep at that size is a
+    # multi-minute soak, not a tier-1 invariant check
+    pytest.param(29, marks=pytest.mark.slow),
+])
 def test_slimfly_mms_invariants(q):
     g = T.make("slimfly", q=q)
     assert g.n == 2 * q * q
