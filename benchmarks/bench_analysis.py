@@ -140,7 +140,8 @@ def _timed(fn, *args, repeats: int = 1, **kw):
 
 
 def baseline(quick: bool = False) -> dict:
-    """Headline perf-trajectory numbers for BENCH_4.json.
+    """Headline perf-trajectory numbers for the repo-root baseline artifact
+    (currently BENCH_5.json; see `benchmarks.run.BASELINE_NAME`).
 
     Measures the device-resident wavefront stack against the host-looped
     reference on the SAME interpret-mode kernel backend at fixed sizes:
@@ -156,7 +157,15 @@ def baseline(quick: bool = False) -> dict:
 
     The acceptance gate (`speedup >= 2x` on analyze at 1024 routers) rides
     on these numbers; `python -m benchmarks.run --baseline` writes them to
-    the repo-root BENCH_4.json that CI uploads per run.
+    the repo-root artifact that CI uploads per run, and
+    `--gate BENCH_4.json` fails the job if any shared speedup column loses
+    more than 30% against the previous PR's committed baseline.
+
+    With more than one jax device visible (the fake-device recipe) an extra
+    ``sharded`` section times the row-sharded wavefront against the
+    single-device engine at the same size; it is reported for trajectory
+    only (single-device CI runners don't produce it, and the gate skips
+    non-shared columns).
     """
     from repro.core import sweep as S
     from repro.core.analysis import wavefront as WF
@@ -230,6 +239,37 @@ def baseline(quick: bool = False) -> dict:
         "device_ms": round(t_tp * 1e3, 1),
         "throughput": round(tp["throughput"], 5),
     }
+
+    # -- tiled out-of-core engine vs the single-buffer wavefront ----------
+    # same exact numbers, bounded footprint; the ms column is the
+    # trajectory for the streaming pump (row tiles + CSR-built panels)
+    from repro.core.analysis import distributed as DX
+
+    (dist_t, mult_t), t_tiled = _timed(
+        lambda: DX.tiled_dist_mult(g, tile_rows=n // 4, adjacency_budget=1))
+    np.testing.assert_array_equal(dist_t, dist_dev)
+    np.testing.assert_array_equal(mult_t, mult_dev)
+    out["tiled"] = {
+        "family": g.name, "routers": n, "tile_rows": n // 4,
+        "streamed_ms": round(t_tiled * 1e3, 1),
+        "device_ms": out["analyze"]["device_ms"],
+    }
+
+    # -- row-sharded wavefront (only when a multi-device mesh is up) ------
+    import jax
+
+    if jax.device_count() > 1:
+        mesh = DX.default_mesh(n)
+        (dist_s, mult_s), t_shard = _timed(
+            lambda: DX.sharded_dist_mult(adj, mesh=mesh))
+        np.testing.assert_array_equal(dist_s, dist_dev)
+        np.testing.assert_array_equal(mult_s, mult_dev)
+        out["sharded"] = {
+            "family": g.name, "routers": n,
+            "shards": int(mesh.size),
+            "sharded_ms": round(t_shard * 1e3, 1),
+            "device_ms": out["analyze"]["device_ms"],
+        }
     return out
 
 

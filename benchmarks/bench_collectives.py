@@ -13,7 +13,6 @@ Valiant vs slack-1) through `routing` on the same demand.
 """
 from __future__ import annotations
 
-import math
 import time
 from typing import List
 

@@ -3,7 +3,6 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 # ---- 1. generate an extreme-scale interconnect -----------------------------
 from repro.core import topology as T

@@ -12,7 +12,6 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 __all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "shape_for"]
 

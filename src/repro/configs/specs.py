@@ -11,7 +11,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .base import ModelConfig, ShapeSpec, shape_for
+from .base import ModelConfig, shape_for
 from ..models import encdec, steps, transformer
 from ..models.common import abstract_params
 

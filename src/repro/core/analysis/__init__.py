@@ -11,5 +11,9 @@ from .wavefront import (  # noqa: F401
     dist_mult_device, ecmp_loads_device, squaring_apsp_device,
     wavefront_dist_mult,
 )
+from .distributed import (  # noqa: F401
+    default_mesh, device_mesh, dist_mult_sharded, ecmp_loads_sharded,
+    sharded_dist_mult, tiled_dist_mult, tiled_dist_mult_tiles, tiled_summary,
+)
 from .spectral import fiedler_value, spectral_bounds  # noqa: F401
 from .histograms import path_length_histogram  # noqa: F401

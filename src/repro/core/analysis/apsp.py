@@ -34,7 +34,8 @@ _SPAN_BUDGET = 1 << 22
 
 def apsp_dense(g: Graph, use_kernel: bool = True,
                block: Optional[int] = None, max_squarings: int = 8,
-               method: Optional[str] = None) -> np.ndarray:
+               method: Optional[str] = None, mesh=None,
+               tile_rows: Optional[int] = None) -> np.ndarray:
     """Dense APSP. Returns (n, n) float32 hop distances, inf = unreachable.
 
     ``method="wavefront"`` (the kernel-path default) runs the device-resident
@@ -42,14 +43,31 @@ def apsp_dense(g: Graph, use_kernel: bool = True,
     ``method="squaring"`` is the tropical min-plus squaring oracle
     (ceil(log2(diameter)) products); it is also the ``use_kernel=False``
     default, running the jnp oracle product with a host-side loop.
+
+    Extreme-scale knobs (`analysis.distributed`): ``mesh`` runs the
+    wavefront row-sharded over a 1-D device mesh (bit-equal results);
+    ``tile_rows`` runs the out-of-core tiled engine instead — source rows
+    stream through the kernels tile by tile, adjacency panels are built
+    from CSR, and no N x N device buffer ever exists (still assembles the
+    full host result; stream tiles yourself via
+    `distributed.tiled_dist_mult_tiles` to avoid that too).
     """
+    if tile_rows is not None:
+        if method not in (None, "wavefront") or not use_kernel:
+            raise ValueError(
+                f"tile_rows runs the tiled wavefront kernel engine — it "
+                f"cannot honor method={method!r} / use_kernel={use_kernel}")
+        from .distributed import tiled_dist_mult
+
+        dist, _ = tiled_dist_mult(g, tile_rows=tile_rows, block=block)
+        return dist
     if method is None:
         method = "wavefront" if use_kernel else "squaring"
     if method == "wavefront":
-        from .wavefront import wavefront_dist_mult
+        from .distributed import sharded_dist_mult
 
-        dist, _ = wavefront_dist_mult(g.adjacency_dense(np.float32),
-                                      block=block)
+        dist, _ = sharded_dist_mult(g.adjacency_dense(np.float32),
+                                    mesh=mesh, block=block)
         return dist
     if method != "squaring":
         raise ValueError(f"unknown APSP method {method!r}")

@@ -52,7 +52,7 @@ class AnalysisEngine:
                  n_sources: int = 64, use_kernel: bool = True,
                  interference_pairs: int = 64, seed: int = 0,
                  throughput_eps: float = 0.25, throughput_rounds: int = 64,
-                 throughput_demand: str = "auto"):
+                 throughput_demand: str = "auto", mesh="auto"):
         self.g = g
         self.dense_limit = dense_limit
         self.n_sources = n_sources
@@ -62,7 +62,18 @@ class AnalysisEngine:
         self.throughput_eps = throughput_eps
         self.throughput_rounds = throughput_rounds
         self.throughput_demand = throughput_demand
+        #: "auto" = row-shard the wavefront over all visible devices when
+        #: more than one is up (`distributed.default_mesh`); an explicit
+        #: Mesh pins the layout; None forces the single-device engine
+        self.mesh = mesh
         self._cache: Dict[str, object] = {}
+
+    def _resolved_mesh(self):
+        if self.mesh != "auto":
+            return self.mesh
+        from .distributed import default_mesh
+
+        return default_mesh(self.g.n)
 
     @property
     def exact(self) -> bool:
@@ -80,10 +91,12 @@ class AnalysisEngine:
         """
         if "dist" not in self._cache:
             if self.exact and self.use_kernel:
-                from .wavefront import wavefront_dist_mult
+                from .distributed import sharded_dist_mult
 
-                dist, mult = wavefront_dist_mult(
-                    self.g.adjacency_dense(np.float32))
+                # mesh=None degrades to the single-device wavefront engine
+                dist, mult = sharded_dist_mult(
+                    self.g.adjacency_dense(np.float32),
+                    mesh=self._resolved_mesh())
                 self._cache["dist"], self._cache["mult"] = dist, mult
             elif self.exact:
                 self._cache["dist"] = apsp_dense(self.g, use_kernel=False)
@@ -163,7 +176,8 @@ class AnalysisEngine:
             mult = self.shortest_path_mult()
             adj = self.g.adjacency_dense(np.float64)
             loads = ecmp_all_pairs_loads(dist, mult, adj,
-                                         use_kernel=self.use_kernel)
+                                         use_kernel=self.use_kernel,
+                                         mesh=self._resolved_mesh())
             off = np.isfinite(dist) & (dist > 0)
             peak = float(loads.max())
             spec = self.g.meta.get("spec")

@@ -80,6 +80,7 @@ def _count_product(use_kernel: bool):
 
 def shortest_path_multiplicity(
         g: Graph, dist: Optional[np.ndarray] = None, use_kernel: bool = True,
+        mesh=None, tile_rows: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact (dist, multiplicity) matrices for all router pairs.
 
@@ -93,15 +94,24 @@ def shortest_path_multiplicity(
     fused tropical-count relaxation survives as
     :func:`tropical_count_relaxation`, the kernel-path oracle.
 
+    Extreme-scale knobs (`analysis.distributed`, kernel path without
+    ``dist`` only): ``mesh`` row-shards the wavefront over a device mesh
+    (bit-equal); ``tile_rows`` streams source tiles out-of-core instead.
+
     Every count the kernel path keeps is a sum of nonnegative terms equal
     to some sigma(i, j), so results are exact iff the largest multiplicity
     fits f32's integer range; past that a RuntimeWarning is emitted.
     """
-    if dist is None and use_kernel:
-        from .wavefront import wavefront_dist_mult
+    if dist is None and use_kernel and tile_rows is not None:
+        from .distributed import tiled_dist_mult
 
-        # wavefront_dist_mult warns on f32-inexact counts itself
-        return wavefront_dist_mult(g.adjacency_dense(np.float32))
+        return tiled_dist_mult(g, tile_rows=tile_rows)
+    if dist is None and use_kernel:
+        from .distributed import sharded_dist_mult
+
+        # sharded/wavefront engines warn on f32-inexact counts themselves;
+        # mesh=None is exactly the single-device wavefront path
+        return sharded_dist_mult(g.adjacency_dense(np.float32), mesh=mesh)
     if dist is None:
         from .apsp import bfs_distances
 

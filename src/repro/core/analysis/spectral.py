@@ -12,7 +12,6 @@ Bounds derived:
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import numpy as np
 import jax

@@ -22,7 +22,6 @@ per-chip DCN share. Latency: (n-1) (ring) or ceil(log2 n) (tree/RHD) hops of
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional
 
 __all__ = ["HardwareModel", "AxisLink", "collective_time", "COLLECTIVE_KINDS"]

@@ -174,7 +174,7 @@ def ecmp_link_loads(g: Graph, dist: np.ndarray, mult: np.ndarray,
 
 def ecmp_all_pairs_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
                          product: Optional[Callable] = None,
-                         use_kernel: bool = True) -> np.ndarray:
+                         use_kernel: bool = True, mesh=None) -> np.ndarray:
     """Directed ECMP link loads under *uniform all-pairs* demand, O(diameter).
 
     Specializing `ecmp_link_loads` to demand == 1 on every reachable pair
@@ -200,9 +200,14 @@ def ecmp_all_pairs_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
     ``1 / loads.max()`` is the exact ECMP lower bound on per-pair
     saturation throughput (capacity 1 per link direction). Tested equal to
     ``ecmp_link_loads(demand=all-ones)``.
+
+    With ``mesh`` (a 1-D `analysis.distributed` row mesh) the kernel path
+    accumulates the Brandes partials shard-locally — each device owns a
+    block of source rows — and psums them once at the end; matches the
+    single-device accumulation to f32 round-off.
     """
     if product is None and use_kernel:
-        return _ecmp_all_pairs_device(dist, mult, adj)
+        return _ecmp_all_pairs_device(dist, mult, adj, mesh)
     if product is None:
         product = count_product(use_kernel)
     finite = np.isfinite(dist)
@@ -219,18 +224,35 @@ def ecmp_all_pairs_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
 
 
 def _ecmp_all_pairs_device(dist: np.ndarray, mult: np.ndarray,
-                           adj: np.ndarray) -> np.ndarray:
-    """Pad -> device-resident Brandes accumulation -> sliced host loads."""
+                           adj: np.ndarray, mesh=None) -> np.ndarray:
+    """Pad -> device-resident Brandes accumulation -> sliced host loads.
+
+    With a multi-device ``mesh`` the accumulation runs shard-local over
+    source rows (`distributed.ecmp_loads_sharded`); jit reshards the
+    replicated uploads onto the mesh per the engine's in_specs.
+    """
     import jax.numpy as jnp
 
     from ..analysis.wavefront import ecmp_loads_device, pad_block, pad_operand
 
     n = np.asarray(dist).shape[-1]
-    p, block = pad_block(n, batched=np.asarray(dist).ndim == 3)
-    loads = ecmp_loads_device(jnp.asarray(pad_operand(dist, p, np.inf)),
-                              jnp.asarray(pad_operand(mult, p, 0.0)),
-                              jnp.asarray(pad_operand(adj, p, 0.0)),
-                              block=block)
+    batched = np.asarray(dist).ndim == 3
+    if mesh is not None and mesh.size > 1:
+        from ..analysis.distributed import (ROW_AXIS, ecmp_loads_sharded,
+                                            pad_block_sharded)
+
+        p, _, block = pad_block_sharded(n, mesh.shape[ROW_AXIS],
+                                        batched=batched)
+        loads = ecmp_loads_sharded(jnp.asarray(pad_operand(dist, p, np.inf)),
+                                   jnp.asarray(pad_operand(mult, p, 0.0)),
+                                   jnp.asarray(pad_operand(adj, p, 0.0)),
+                                   mesh, block=block)
+    else:
+        p, block = pad_block(n, batched=batched)
+        loads = ecmp_loads_device(jnp.asarray(pad_operand(dist, p, np.inf)),
+                                  jnp.asarray(pad_operand(mult, p, 0.0)),
+                                  jnp.asarray(pad_operand(adj, p, 0.0)),
+                                  block=block)
     sl = (Ellipsis, slice(None, n), slice(None, n))
     return np.asarray(loads)[sl].astype(np.float64)
 

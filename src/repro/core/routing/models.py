@@ -31,7 +31,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from ..graph import Graph
-from .assign import (demand_matrix, directed_to_link_loads, ecmp_link_loads,
+from .assign import (directed_to_link_loads, ecmp_link_loads,
                      walk_slack_link_loads)
 
 __all__ = ["RoutingModel", "UniformShortest", "ValiantVLB", "SlackRouting",

@@ -32,7 +32,7 @@ demands, or pass ``capacity``, for other units).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

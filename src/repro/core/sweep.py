@@ -232,12 +232,16 @@ def sweep(families: Optional[Sequence[str]] = None,
           max_routers: int = 1024,
           use_kernel: bool = True,
           throughput: bool = True,
-          graphs: Optional[Sequence[Graph]] = None) -> Dict:
+          graphs: Optional[Sequence[Graph]] = None,
+          mesh="auto") -> Dict:
     """Run the equal-cost comparison; returns ``{"rows": [...], ...}``.
 
     Pass ``graphs`` to analyze a pre-built list (the benchmarks reuse this
     to time the batched path against a per-topology ``analyze()`` loop on
-    identical instances).
+    identical instances). With more than one jax device visible the stacked
+    chain runs row-sharded over a 1-D mesh (`analysis.distributed`):
+    ``mesh="auto"`` picks it up, an explicit Mesh pins it, None forces the
+    single-device engines.
     """
     t0 = time.time()
     if graphs is None:
@@ -249,17 +253,33 @@ def sweep(families: Optional[Sequence[str]] = None,
     if use_kernel:
         # device-resident chain: upload the padded stack once, run the
         # wavefront level loop AND the Brandes accumulation on device, and
-        # transfer only the three final matrices back to host
+        # transfer only the three final matrices back to host. With a
+        # multi-device mesh each device owns a row block of every stacked
+        # problem; only the convergence flag (and one final psum of the
+        # Brandes partials) crosses devices.
         import jax.numpy as jnp
 
+        from .analysis import distributed as DX
         from .analysis import wavefront as WF
 
         k = adj.shape[-1]
-        p, block = WF.pad_block(k, batched=True)
-        adj_d = jnp.asarray(WF.pad_operand(adj, p, 0.0))
-        dist_d, mult_d = WF.dist_mult_device(adj_d, block=block)
-        loads_d = (WF.ecmp_loads_device(dist_d, mult_d, adj_d, block=block)
-                   if throughput else None)
+        if mesh == "auto":
+            mesh = DX.default_mesh(k)
+        if mesh is not None and mesh.size > 1:
+            p, _, block = DX.pad_block_sharded(k, mesh.shape[DX.ROW_AXIS],
+                                               batched=True)
+            adj_d = jnp.asarray(WF.pad_operand(adj, p, 0.0))
+            dist_d, mult_d = DX.dist_mult_sharded(adj_d, mesh, block=block)
+            loads_d = (DX.ecmp_loads_sharded(dist_d, mult_d, adj_d, mesh,
+                                             block=block)
+                       if throughput else None)
+        else:
+            p, block = WF.pad_block(k, batched=True)
+            adj_d = jnp.asarray(WF.pad_operand(adj, p, 0.0))
+            dist_d, mult_d = WF.dist_mult_device(adj_d, block=block)
+            loads_d = (WF.ecmp_loads_device(dist_d, mult_d, adj_d,
+                                            block=block)
+                       if throughput else None)
         dist = np.asarray(dist_d)[:, :k, :k]
         mult = np.asarray(mult_d)[:, :k, :k].astype(np.float64)
         loads = (np.asarray(loads_d)[:, :k, :k] if throughput else None)

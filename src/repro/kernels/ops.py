@@ -14,7 +14,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import autotune, ref
 from .minplus import minplus_matmul_pallas

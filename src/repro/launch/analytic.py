@@ -13,7 +13,6 @@ reads per pass + activation carries + cache/state traffic, per device.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
 __all__ = ["analytic_cost", "CostBreakdown"]

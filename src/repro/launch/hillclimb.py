@@ -10,7 +10,6 @@ optimization applied and records the tagged before/after dry-run artifact.
   PYTHONPATH=src python -m repro.launch.hillclimb --all
 """
 import argparse
-import json
 
 from .dryrun import run_cell
 

@@ -15,7 +15,6 @@ attribute the op to mesh axes (model/data/pod).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -154,8 +153,8 @@ def collective_seconds(ops: Sequence[CollectiveOp], mesh_shape: Dict[str, int],
         # pick the slowest axis the group spans (serialized worst case link)
         bw = None
         for a in op.axes:
-            l = links.get(a)
-            b = l.bandwidth(hw) if l else 2 * hw.ici_link_bw
+            link = links.get(a)
+            b = link.bandwidth(hw) if link else 2 * hw.ici_link_bw
             bw = b if bw is None else min(bw, b)
         if bw is None:
             bw = 2 * hw.ici_link_bw

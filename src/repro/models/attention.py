@@ -12,7 +12,7 @@ slots carry k_pos = -1 and are masked everywhere.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +95,7 @@ def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
         qc, qpc = args  # (B, qc, KV, g, D), (qc,)
 
         def kv_step(carry, inputs):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kc, vc, kpc = inputs  # (B, kc, KV, D), (B, kc, KV, D), (kc,)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
                            preferred_element_type=jnp.float32) * scale
@@ -111,21 +111,21 @@ def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            lsum_new = lsum * corr + jnp.sum(p, axis=-1)
             upd = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
                              preferred_element_type=jnp.float32)
             acc_new = acc * corr[..., None] + upd
-            return (m_new, l_new, acc_new), None
+            return (m_new, lsum_new, acc_new), None
 
         m0 = jnp.full((b, kvh, g, q_chunk), _NEG, jnp.float32)
         l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
             (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
              kpos.reshape(nk, kv_chunk)),
         )
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lsum[..., None], 1e-30)
         return out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, g, D)
 
     out = jax.lax.map(one_q_chunk, (qb, qposb))  # (nq, B, qc, KV, g, D)
@@ -224,13 +224,13 @@ def _decode_attention_sharded(p, q, k, v, cache, cache_pos, cfg, plan):
         s = jnp.where((kpos <= pos)[None, None, None, None, :], s, _NEG)
         m = jnp.max(s, axis=-1)                            # (B,KV,G,1)
         pexp = jnp.exp(s - m[..., None])
-        l = jnp.sum(pexp, axis=-1)
+        lsum = jnp.sum(pexp, axis=-1)
         acc = jnp.einsum("bhgqk,bkhd->bhgqd", pexp.astype(cv.dtype), cv,
                          preferred_element_type=jnp.float32)
         # -- LSE merge across ranks ----------------------------------------
         m_all = jax.lax.pmax(m, ax)
         corr = jnp.exp(m - m_all)
-        l_tot = jax.lax.psum(l * corr, ax)
+        l_tot = jax.lax.psum(lsum * corr, ax)
         acc_tot = jax.lax.psum(acc * corr[..., None], ax)
         out = (acc_tot / jnp.maximum(l_tot[..., None], 1e-30))
         out = out.transpose(0, 3, 1, 2, 4).reshape(bl, 1, h, d).astype(q_l.dtype)

@@ -8,7 +8,7 @@ output. Decode keeps a self-attention KV cache plus precomputed cross KV.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

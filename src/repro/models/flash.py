@@ -91,7 +91,7 @@ def _flash_fwd(q, k, v, causal, prefix_len, q_chunk, kv_chunk, q_offset):
         qc, iq = args  # (B, qc, KV, G, D), scalar chunk index
 
         def kv_step(carry, inp):
-            m, l, acc, k0 = carry
+            m, lsum, acc, k0 = carry
             kc_, vc = inp
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc_,
                            preferred_element_type=jnp.float32) * scale
@@ -101,19 +101,19 @@ def _flash_fwd(q, k, v, causal, prefix_len, q_chunk, kv_chunk, q_offset):
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            lsum_new = lsum * corr + jnp.sum(p, axis=-1)
             upd = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
                              preferred_element_type=jnp.float32)
-            return (m_new, l_new, acc * corr[..., None] + upd,
+            return (m_new, lsum_new, acc * corr[..., None] + upd,
                     k0 + kv_chunk), None
 
         m0 = jnp.full((b, kvh, g, q_chunk), _NEG, jnp.float32)
         l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
-        (m, l, acc, _), _ = jax.lax.scan(
+        (m, lsum, acc, _), _ = jax.lax.scan(
             kv_step, (m0, l0, a0, jnp.int32(0)), (kb, vb))
-        o = acc / jnp.maximum(l[..., None], 1e-30)
-        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        o = acc / jnp.maximum(lsum[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(lsum, 1e-30))
         return o.transpose(0, 3, 1, 2, 4), lse  # (B, qc, KV, G, D), (B,KV,G,qc)
 
     outs, lses = jax.lax.map(one_q, (qb, jnp.arange(nq, dtype=jnp.int32)))

@@ -25,7 +25,7 @@ aux loss (globally averaged on the EP path via pmean) is returned.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,14 +8,13 @@ via `optim.compression` when enabled.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import encdec, transformer
-from ..optim import AdamWConfig, adamw, schedule as sched
+from ..optim import AdamWConfig, adamw
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step", "init_train_state"]
 
@@ -96,9 +95,9 @@ def make_train_step(cfg, opt_cfg: Optional[AdamWConfig] = None,
 
             def acc(carry, mb):
                 g_acc, l_acc, n_acc = carry
-                (l, n), g = grad_fn(params, mb)
+                (loss_mb, n), g = grad_fn(params, mb)
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
-                return (g_acc, l_acc + l, n_acc + n), None
+                return (g_acc, l_acc + loss_mb, n_acc + n), None
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
             (grads, loss, nll), _ = jax.lax.scan(

@@ -7,7 +7,7 @@ by default; Jamba-398B runs bf16 moments + bf16 master to fit HBM
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

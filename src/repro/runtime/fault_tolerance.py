@@ -62,15 +62,15 @@ class HealthTracker:
             lat.pop(0)
 
     def stragglers(self) -> List[int]:
-        all_lat = [l[-1] for l in self._lat.values() if l]
+        all_lat = [hist[-1] for hist in self._lat.values() if hist]
         if len(all_lat) < max(2, self.n_hosts // 2):
             return []
         med = float(np.median(all_lat))
         out = []
-        for h, l in self._lat.items():
-            if h in self.failed or not l:
+        for h, hist in self._lat.items():
+            if h in self.failed or not hist:
                 continue
-            if l[-1] > self.factor * med:
+            if hist[-1] > self.factor * med:
                 self._slow_streak[h] += 1
             else:
                 self._slow_streak[h] = 0

@@ -13,9 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .rules import ShardingPlan, param_shardings, spec_to_pspec
+from .rules import ShardingPlan, param_shardings
 from ..models import steps as steps_mod
-from ..models.common import Spec
 
 __all__ = [
     "activation_ctx", "maybe_constrain", "train_state_shardings",

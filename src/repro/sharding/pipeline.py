@@ -21,7 +21,6 @@ jax.grad.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

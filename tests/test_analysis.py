@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import topology as T, workload as W
-from repro.core.analysis import analyze, fiedler_value, spectral_bounds
+from repro.core.analysis import fiedler_value, spectral_bounds
 from repro.core.collectives import (
     AxisLink, HardwareModel, PhysicalFabric, collective_time,
     hierarchical_all_reduce_time, plan_mesh_mapping,

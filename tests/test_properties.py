@@ -5,7 +5,6 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import topology as T

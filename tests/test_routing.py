@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import routing as R, topology as T, workload as W
-from repro.core.analysis import AnalysisEngine, apsp_dense
+from repro.core.analysis import AnalysisEngine
 from repro.core.analysis.paths import pair_edge_loads
 from repro.core.graph import Graph
 

@@ -1,5 +1,4 @@
 """Sharding plan + roofline parsing tests (no multi-device needed)."""
-import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec as P
@@ -11,7 +10,7 @@ from repro.launch.roofline import (
     roofline_report,
 )
 from repro.models.common import Spec
-from repro.sharding.rules import ShardingPlan, make_plan, spec_to_pspec
+from repro.sharding.rules import make_plan, spec_to_pspec
 
 
 class _FakeMesh:
