@@ -51,12 +51,64 @@ BASELINE_NAME = "BENCH_5.json"
 #: a shared speedup column may lose at most this fraction vs the reference
 GATE_TOLERANCE = 0.30
 
+#: artifact subtrees the gate never reads: run provenance and the span
+#: summary vary per machine/run and must not produce speedup columns
+GATE_IGNORED_KEYS = ("meta", "spans")
+
+
+def run_metadata() -> dict:
+    """Provenance stamp for a BENCH artifact: where and on what it ran.
+
+    Every field degrades to ``None``/"unknown" rather than raising —
+    stamping a benchmark must never fail it.
+    """
+    import datetime
+    import platform
+    import subprocess
+
+    meta = {
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "git_sha": None,
+        "jax": None,
+        "jaxlib": None,
+        "device_kind": None,
+        "device_count": None,
+    }
+    try:
+        meta["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=pathlib.Path(__file__).resolve().parents[1], timeout=10,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        pass
+    try:
+        import jax
+        import jaxlib
+
+        meta["jax"] = jax.__version__
+        meta["jaxlib"] = jaxlib.__version__
+        devs = jax.local_devices()
+        meta["device_kind"] = devs[0].device_kind if devs else "none"
+        meta["device_count"] = len(devs)
+    except Exception:  # noqa: BLE001 - stamp what we can
+        pass
+    return meta
+
 
 def _speedup_columns(node, prefix: str = "") -> dict:
-    """Flatten every numeric ``*speedup`` leaf to {"a.b.speedup": value}."""
+    """Flatten every numeric ``*speedup`` leaf to {"a.b.speedup": value}.
+
+    The ``meta`` / ``spans`` subtrees (run provenance, span summaries) are
+    skipped at every level: metadata never gates.
+    """
     cols = {}
     if isinstance(node, dict):
         for key, val in sorted(node.items()):
+            if key in GATE_IGNORED_KEYS:
+                continue
             path = f"{prefix}.{key}" if prefix else key
             if isinstance(val, dict):
                 cols.update(_speedup_columns(val, path))
@@ -107,9 +159,16 @@ def main() -> None:
                          "committed BENCH file must never gate itself)")
     args = ap.parse_args()
     if args.baseline or args.gate:
+        from repro import obs
+
         path = OUT.parents[1] / BASELINE_NAME
+        # trace the baseline run: the artifact carries the per-span
+        # time summary next to the numbers it explains
+        obs.enable()
         summary = bench_analysis.baseline(quick=args.quick)
         summary["tier"] = "perf-trajectory"
+        summary["meta"] = run_metadata()
+        summary["spans"] = obs.span_summary()
         path.write_text(json.dumps(summary, indent=1) + "\n")
         print(json.dumps(summary, indent=1))
         print(f"[baseline] wrote {path}")

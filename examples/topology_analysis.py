@@ -19,6 +19,10 @@ throughput lower bound, cost, power) — then a timing section comparing the
 batched sweep against looping ``analyze()`` per topology at ~1024 routers.
 
   PYTHONPATH=src python examples/topology_analysis.py --sweep
+
+``--trace out.json`` (either mode) records the run through `repro.obs` and
+writes a Chrome trace-event file — load it in https://ui.perfetto.dev or
+summarize with ``python -m repro.obs.report out.json``.
 """
 import sys
 
@@ -40,14 +44,22 @@ def main_sweep(argv):
     ap.add_argument("--no-kernel", action="store_true")
     ap.add_argument("--skip-bench", action="store_true",
                     help="table only; skip the 1024-router timing section")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome trace-event file of the run")
     args = ap.parse_args(argv)
     use_kernel = not args.no_kernel
+    if args.trace:
+        from repro import obs
+
+        obs.enable()
 
     result = S.sweep(ref=("slimfly", args.ref_servers),
                      max_routers=args.max_routers, use_kernel=use_kernel)
     print(S.format_table(result))
 
     if args.skip_bench:
+        if args.trace:
+            _export_trace(args.trace)
         return
     # -- batched sweep vs looping analyze() at ~1024 routers --------------
     bench = [T.make("polarfly", q=31),           # 993 routers, diameter 2
@@ -67,11 +79,28 @@ def main_sweep(argv):
     for row in swept["rows"]:
         print(f"  {row['params']:<24} diam={row['diameter']} "
               f"mult={row['mult_mean']:.2f} tput_lb={row['tput_lb']:.4f}")
+    if args.trace:
+        _export_trace(args.trace)
+
+
+def _export_trace(path):
+    from repro import obs
+
+    obs.export(path)
+    obs.log("example.trace", path=path)
 
 
 if "--sweep" in sys.argv:
     main_sweep(sys.argv[1:])
     sys.exit(0)
+
+# default walkthrough: module-level code below; --trace is handled by hand
+_TRACE_OUT = None
+if "--trace" in sys.argv:
+    from repro import obs
+
+    _TRACE_OUT = sys.argv[sys.argv.index("--trace") + 1]
+    obs.enable()
 
 from repro.core import routing as R, topology as T, workload as W
 from repro.core.analysis import AnalysisEngine
@@ -141,3 +170,6 @@ rep = pod_traffic_report(fab, np.ones((n, n)) - np.eye(n))
 print(f"\nPod torus {fab.torus_dims} all-to-all congestion: "
       f"max={rep['max_link_load']:.1f} imbalance={rep['load_imbalance']:.2f} "
       f"({rep['routing_model']})")
+
+if _TRACE_OUT:
+    _export_trace(_TRACE_OUT)

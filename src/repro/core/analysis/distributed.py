@@ -161,7 +161,7 @@ def _fit_sharded(p: int, num_shards: int, block: Optional[int],
 
 @functools.lru_cache(maxsize=None)
 def _dist_mult_sharded_fn(mesh, batched: bool, bm: int, block: int,
-                          interpret: bool):
+                          interpret: bool, telemetry: bool = False):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -171,7 +171,7 @@ def _dist_mult_sharded_fn(mesh, batched: bool, bm: int, block: int,
             else kernels.semiring.frontier_step_pallas)
     num_shards = mesh.shape[ROW_AXIS]
 
-    def local(adj: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def local(adj: jnp.ndarray):
         # adj is the full replicated (.., p, p) adjacency; this shard owns
         # rows [r0, r0 + rows) of dist / mult / frontier
         p = adj.shape[-1]
@@ -183,37 +183,72 @@ def _dist_mult_sharded_fn(mesh, batched: bool, bm: int, block: int,
                                adj.shape[:-2] + (rows, p))
         dist0 = jnp.where(eye > 0, 0.0, _INF)
 
+        if not telemetry:
+            def cond(state):
+                level, _, _, _, more = state
+                return more & (level <= p)
+
+            def body(state):
+                level, dist, mult, frontier, _ = state
+                x = step(frontier, adj, dist, bm=bm, bn=block, bk=block,
+                         interpret=interpret)
+                new = x > 0
+                dist = jnp.where(new, level.astype(jnp.float32), dist)
+                mult = mult + x
+                # the ONE per-level collective: did any shard reach a new
+                # pair?
+                more = jax.lax.psum(new.any().astype(jnp.int32),
+                                    ROW_AXIS) > 0
+                return level + 1, dist, mult, x, more
+
+            _, dist, mult, _, _ = jax.lax.while_loop(
+                cond, body, (jnp.int32(1), dist0, eye, eye, jnp.bool_(True)))
+            return dist, mult
+
+        # telemetry variant: the per-level psum widens from the one-int
+        # convergence flag to the global newly-reached counts (one extra
+        # int per stacked problem per level — still collective-only, no
+        # host callback); `telemetry` keys the lru cache so the plain
+        # jaxpr stays byte-identical
+        sizes0 = jnp.zeros((p + 1, adj.shape[0]) if batched else (p + 1,),
+                           jnp.int32)
+
         def cond(state):
-            level, _, _, _, more = state
+            level, _, _, _, more, _ = state
             return more & (level <= p)
 
         def body(state):
-            level, dist, mult, frontier, _ = state
+            level, dist, mult, frontier, _, sizes = state
             x = step(frontier, adj, dist, bm=bm, bn=block, bk=block,
                      interpret=interpret)
             new = x > 0
             dist = jnp.where(new, level.astype(jnp.float32), dist)
             mult = mult + x
-            # the ONE per-level collective: did any shard reach a new pair?
-            more = jax.lax.psum(new.any().astype(jnp.int32), ROW_AXIS) > 0
-            return level + 1, dist, mult, x, more
+            cnt = jax.lax.psum(
+                jnp.sum(new, axis=(-2, -1), dtype=jnp.int32), ROW_AXIS)
+            sizes = sizes.at[level].set(cnt)
+            more = (cnt.sum() if batched else cnt) > 0
+            return level + 1, dist, mult, x, more, sizes
 
-        _, dist, mult, _, _ = jax.lax.while_loop(
-            cond, body, (jnp.int32(1), dist0, eye, eye, jnp.bool_(True)))
-        return dist, mult
+        level, dist, mult, _, _, sizes = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(1), dist0, eye, eye, jnp.bool_(True), sizes0))
+        return dist, mult, (level - 1, sizes)
 
     lead = (None,) * (1 if batched else 0)
     out_spec = P(*lead, ROW_AXIS, None)
+    out_specs = ((out_spec, out_spec, (P(), P()))
+                 if telemetry else (out_spec, out_spec))
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(*lead, None, None),),
-                   out_specs=(out_spec, out_spec), check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return jax.jit(fn)
 
 
 def dist_mult_sharded(adj: jnp.ndarray, mesh, bm: Optional[int] = None,
                       block: Optional[int] = None,
-                      interpret: Optional[bool] = None
-                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                      interpret: Optional[bool] = None,
+                      telemetry: bool = False):
     """Row-sharded hop distances + multiplicities, fully on the mesh.
 
     ``adj`` is a (p, p) or stacked (B, p, p) {0,1} float adjacency whose
@@ -222,6 +257,10 @@ def dist_mult_sharded(adj: jnp.ndarray, mesh, bm: Optional[int] = None,
     row-sharded device arrays (dist, mult) bit-equal to
     `wavefront.dist_mult_device` on the same operand. One jitted call; the
     level loop never leaves the mesh.
+
+    ``telemetry=True`` additionally returns the replicated aux pair
+    ``(levels, sizes)`` — globally psum'd per-level newly-reached pair
+    counts, same convention as `wavefront.dist_mult_device`.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -231,7 +270,8 @@ def dist_mult_sharded(adj: jnp.ndarray, mesh, bm: Optional[int] = None,
     row, col = _fit_sharded(p, num_shards, block, batched)
     if bm is not None and (p // num_shards) % bm == 0:
         row = bm
-    return _dist_mult_sharded_fn(mesh, batched, row, col, interpret)(adj)
+    return _dist_mult_sharded_fn(mesh, batched, row, col, interpret,
+                                 telemetry)(adj)
 
 
 def sharded_dist_mult(adj: np.ndarray, mesh=None,
@@ -241,10 +281,13 @@ def sharded_dist_mult(adj: np.ndarray, mesh=None,
 
     The sharded mirror of `wavefront.wavefront_dist_mult`; with
     ``mesh=None`` (or a would-be single-device mesh) it simply delegates
-    there, so a P=1 "mesh" is the unsharded path by construction.
+    there, so a P=1 "mesh" is the unsharded path by construction. Under an
+    enabled `repro.obs` tracer the call is spanned and the mesh-wide
+    telemetry (levels, frontier sizes) lands in the span attributes.
     """
+    from ... import obs
     from .paths import _warn_if_inexact
-    from .wavefront import wavefront_dist_mult
+    from .wavefront import telemetry_attrs, wavefront_dist_mult
 
     if mesh is None:
         return wavefront_dist_mult(adj, block=block)
@@ -255,12 +298,24 @@ def sharded_dist_mult(adj: np.ndarray, mesh=None,
         return wavefront_dist_mult(adj, block=block)
     p, _, block = pad_block_sharded(n, num_shards, block,
                                     batched=adj.ndim == 3)
-    dist, mult = dist_mult_sharded(jnp.asarray(pad_operand(adj, p, 0.0)),
-                                   mesh, block=block)
-    sl = (Ellipsis, slice(None, n), slice(None, n))
-    mult = np.asarray(mult)[sl]
+    tel = obs.enabled()
+    with obs.span("wavefront.dist_mult_sharded", routers=n, padded=p,
+                  block=block, shards=num_shards,
+                  batched=adj.ndim == 3) as sp:
+        padded = pad_operand(adj, p, 0.0)
+        obs.record_h2d(padded.nbytes, "adjacency")
+        out = dist_mult_sharded(jnp.asarray(padded), mesh, block=block,
+                                telemetry=tel)
+        if tel:
+            dist, mult, aux = out
+            sp.set(**telemetry_attrs(aux))
+        else:
+            dist, mult = out
+        sl = (Ellipsis, slice(None, n), slice(None, n))
+        mult = np.asarray(mult)[sl]
+        dist = np.asarray(dist)[sl]
     _warn_if_inexact(mult, use_kernel=True)
-    return np.asarray(dist)[sl], mult
+    return dist, mult
 
 
 # -- sharded Brandes ECMP loads ------------------------------------------------
@@ -482,6 +537,8 @@ def tiled_dist_mult_tiles(
         raise ValueError(f"sources {sources!r} outside [0, {n})")
     tile_rows = max(1, min(tile_rows, hi - lo))
 
+    from ... import obs
+
     stream = pc * pc * 4 > adjacency_budget
     if panel_rows is None:
         panel_rows = min(pc, max(_TILE, adjacency_budget // (8 * pc * 4)))
@@ -502,6 +559,7 @@ def tiled_dist_mult_tiles(
         for k0 in range(0, n, panel_rows):
             k1 = min(n, k0 + panel_rows)
             adj_host[k0:k1] = fill(k0, k1, panel_buf)[:k1 - k0]
+        obs.record_h2d(adj_host.nbytes, "adjacency")
         adj_dev = jnp.asarray(adj_host)
         del adj_host
     # panels re-read per level in streaming mode; precompute the schedule
@@ -521,36 +579,46 @@ def tiled_dist_mult_tiles(
             # per grid program (see _largest_divisor_block)
             tp = _pad128(t)
             bm = _largest_divisor_block(tp, 512)
-        eye = np.zeros((tp, pc), np.float32)
-        eye[np.arange(t), np.arange(r0, r1)] = 1.0
-        dist = jnp.asarray(np.where(eye > 0, np.float32(0), np.float32(np.inf)))
-        mult = jnp.asarray(eye)
-        frontier = mult
-        level_fused = _tile_level_fn(bm, bn, bk, interpret)
-        level_masked = _mask_update_fn()
-        panel_acc = _panel_accumulate_fn(bm, bn, bk_panel, interpret)
+        with obs.span("tiled.tile", cat="tiled", r0=r0, r1=r1,
+                      streamed=stream) as sp:
+            eye = np.zeros((tp, pc), np.float32)
+            eye[np.arange(t), np.arange(r0, r1)] = 1.0
+            seed = np.where(eye > 0, np.float32(0), np.float32(np.inf))
+            obs.record_h2d(eye.nbytes + seed.nbytes, "tile_seed")
+            dist = jnp.asarray(seed)
+            mult = jnp.asarray(eye)
+            frontier = mult
+            level_fused = _tile_level_fn(bm, bn, bk, interpret)
+            level_masked = _mask_update_fn()
+            panel_acc = _panel_accumulate_fn(bm, bn, bk_panel, interpret)
 
-        level = 1
-        while level <= n:
-            lv = jnp.int32(level)
-            if stream:
-                x = jnp.zeros((tp, pc), jnp.float32)
-                for k0, k1 in panels:
-                    # upload a NUMPY copy: big host arrays go to the CPU
-                    # "device" zero-copy (even under jnp.array(copy=True)),
-                    # and the pump mutates the staging buffer for the next
-                    # panel while this product is still in flight — only a
-                    # host-side copy actually pins this panel's bytes
-                    panel = jnp.asarray(fill(k0, k1, panel_buf).copy())
-                    x = panel_acc(x, frontier, panel, jnp.int32(k0))
-                dist, mult, frontier, more = level_masked(x, dist, mult, lv)
-            else:
-                dist, mult, frontier, more = level_fused(
-                    frontier, adj_dev, dist, mult, lv)
-            if not bool(more):
-                break
-            level += 1
-        yield r0, r1, np.asarray(dist)[:t, :n], np.asarray(mult)[:t, :n]
+            pumped = 0
+            level = 1
+            while level <= n:
+                lv = jnp.int32(level)
+                if stream:
+                    x = jnp.zeros((tp, pc), jnp.float32)
+                    for k0, k1 in panels:
+                        # upload a NUMPY copy: big host arrays go to the
+                        # CPU "device" zero-copy (even under
+                        # jnp.array(copy=True)), and the pump mutates the
+                        # staging buffer for the next panel while this
+                        # product is still in flight — only a host-side
+                        # copy actually pins this panel's bytes
+                        panel = jnp.asarray(fill(k0, k1, panel_buf).copy())
+                        obs.record_h2d(panel.nbytes, "panel")
+                        x = panel_acc(x, frontier, panel, jnp.int32(k0))
+                        pumped += 1
+                    dist, mult, frontier, more = level_masked(x, dist, mult,
+                                                              lv)
+                else:
+                    dist, mult, frontier, more = level_fused(
+                        frontier, adj_dev, dist, mult, lv)
+                if not bool(more):
+                    break
+                level += 1
+            sp.set(levels=level, panels_pumped=pumped)
+            yield r0, r1, np.asarray(dist)[:t, :n], np.asarray(mult)[:t, :n]
 
 
 def tiled_dist_mult(source, tile_rows: int = 512,
@@ -580,12 +648,10 @@ def tiled_dist_mult(source, tile_rows: int = 512,
 
 
 def _peak_rss_mb() -> float:
-    import resource
-    import sys
+    from ... import obs
 
-    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-    # ru_maxrss is bytes on macOS, KiB everywhere else
-    return rss / 2**20 if sys.platform == "darwin" else rss / 1024.0
+    # the platform quirks (macOS bytes vs KiB) live in the obs samplers now
+    return obs.peak_rss_mb()
 
 
 def tiled_summary(source, tile_rows: int = 512,
@@ -598,10 +664,14 @@ def tiled_summary(source, tile_rows: int = 512,
     average shortest-path length and multiplicity stats, and reports the
     measured peak RSS next to what the single-buffer device engine would
     need (its while_loop carries adjacency + eye + dist + mult + two
-    frontiers: 6 padded N^2 f32 buffers) — the logged memory-budget
-    evidence for the extreme-scale claim.
+    frontiers: 6 padded N^2 f32 buffers) — the memory-budget evidence for
+    the extreme-scale claim, sampled through the structured `repro.obs`
+    meters (``tiled.peak_rss_mb`` gauge, ``tiled.tiles`` counter) instead
+    of ad-hoc prints.
     """
     import time
+
+    from ... import obs
 
     n = _router_count(source)
     t0 = time.perf_counter()
@@ -613,19 +683,26 @@ def tiled_summary(source, tile_rows: int = 512,
     mult_max = 0.0
     rows_done = 0
     tiles = 0
-    for r0, r1, d, m in tiled_dist_mult_tiles(source, tile_rows, panel_rows,
-                                              sources=sources, **kw):
-        off = np.isfinite(d) & (d > 0)
-        if off.any():
-            diam = max(diam, int(d[off].max()))
-            pairs += int(off.sum())
-            dist_sum += float(d[off].sum())
-            mult_sum += float(m[off].sum())
-            mult_min = min(mult_min, float(m[off].min()))
-            mult_max = max(mult_max, float(m[off].max()))
-        rows_done += r1 - r0
-        tiles += 1
+    with obs.span("tiled.summary", cat="tiled", routers=n,
+                  tile_rows=tile_rows) as sp:
+        for r0, r1, d, m in tiled_dist_mult_tiles(source, tile_rows,
+                                                  panel_rows,
+                                                  sources=sources, **kw):
+            off = np.isfinite(d) & (d > 0)
+            if off.any():
+                diam = max(diam, int(d[off].max()))
+                pairs += int(off.sum())
+                dist_sum += float(d[off].sum())
+                mult_sum += float(m[off].sum())
+                mult_min = min(mult_min, float(m[off].min()))
+                mult_max = max(mult_max, float(m[off].max()))
+            rows_done += r1 - r0
+            tiles += 1
+            obs.counter("tiled.tiles").add()
+            obs.sample_process("tiled")
+        sp.set(tiles=tiles, diameter=diam)
     pc = _pad128(n)
+    obs.gauge("tiled.peak_rss_mb").set(round(_peak_rss_mb(), 1))
     return {
         "routers": n,
         "rows_analyzed": rows_done,
@@ -702,9 +779,16 @@ def main(argv=None) -> int:
                     help="device bytes before adjacency panels stream")
     ap.add_argument("--check", type=int, default=2,
                     help="spot-check this many sources vs the CSR oracle")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable tracing and write a Chrome trace-event "
+                         "file (load in https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
+    from ... import obs
     from .. import topology as topo
+
+    if args.trace:
+        obs.enable()
 
     if args.family == "jellyfish":
         g = topo.make("jellyfish", n=args.routers, r=args.degree, seed=0)
@@ -723,8 +807,8 @@ def main(argv=None) -> int:
                 od, osig = bfs_dist_sigma(g, r0 + i)
                 np.testing.assert_array_equal(d[i], od.astype(np.float32))
                 np.testing.assert_array_equal(m[i], osig.astype(np.float32))
-        print(f"[distributed] oracle spot-check OK "
-              f"({probe[1] - probe[0]} sources)")
+        obs.log("distributed.check", status="oracle spot-check OK",
+                sources=probe[1] - probe[0])
 
     summary = tiled_summary(g, tile_rows=args.tile_rows,
                             panel_rows=args.panel_rows, sources=srcs,
@@ -733,6 +817,9 @@ def main(argv=None) -> int:
     summary["adjacency_streamed"] = bool(
         _pad128(g.n) ** 2 * 4 > args.adjacency_budget)
     print(json.dumps(summary, indent=1))
+    if args.trace:
+        obs.export(args.trace)
+        obs.log("distributed.trace", path=args.trace)
     return 0
 
 

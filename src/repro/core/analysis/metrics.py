@@ -16,6 +16,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from ... import obs
 from ..graph import Graph
 from .apsp import apsp_dense, sampled_distances
 from .histograms import path_length_histogram
@@ -282,17 +283,23 @@ class AnalysisEngine:
         if unknown:
             raise ValueError(f"unknown stages {sorted(unknown)}")
         rep = dict(self.g.summary())
-        for stage in self.STAGES:  # canonical order regardless of input order
-            if stage not in stages:
-                continue
-            if stage == "diversity":
-                # interference needs multiplicities; only pay for it when
-                # that stage was requested, so output depends solely on
-                # the requested stage set (never on engine cache history)
-                rep.update(self._report_diversity(
-                    with_interference="multiplicities" in stages))
-            else:
-                rep.update(getattr(self, f"_report_{stage}")())
+        with obs.span("analysis.report", cat="analysis",
+                      family=self.g.name, routers=self.g.n,
+                      stages=",".join(stages), exact=self.exact):
+            for stage in self.STAGES:  # canonical order, not input order
+                if stage not in stages:
+                    continue
+                with obs.span(f"analysis.{stage}", cat="analysis",
+                              family=self.g.name, routers=self.g.n):
+                    if stage == "diversity":
+                        # interference needs multiplicities; only pay for
+                        # it when that stage was requested, so output
+                        # depends solely on the requested stage set
+                        # (never on engine cache history)
+                        rep.update(self._report_diversity(
+                            with_interference="multiplicities" in stages))
+                    else:
+                        rep.update(getattr(self, f"_report_{stage}")())
         return rep
 
 

@@ -25,19 +25,33 @@ Everything is shape-specialized and cached: one compiled executable per
 (padded shape, block config), chosen through the kernel autotuner's
 persisted table (`repro.kernels.autotune`). A regression test asserts the
 loop lowers to a single compiled call with zero host transfers.
+
+**In-loop telemetry, without callbacks.** With ``telemetry=True`` the
+jitted engines carry a small auxiliary state through the `while_loop` —
+levels executed, per-level newly-reached pair counts (the wavefront's
+frontier sizes), squaring count — and return it as extra *device* outputs
+next to the matrices; the host wrappers fold it into the active
+observability span (`repro.obs`). No host callback, no transfer inside the
+loop: the aux arrays ride the same single device `while` and come back
+with the final download. ``telemetry`` is part of the lru-cache key, so
+the ``telemetry=False`` jaxpr is byte-identical to the uninstrumented
+engine — asserted in ``tests/test_wavefront.py``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from ... import obs
+
 __all__ = ["wavefront_dist_mult", "dist_mult_device", "ecmp_loads_device",
-           "squaring_apsp_device", "pad_block", "pad_operand"]
+           "squaring_apsp_device", "pad_block", "pad_operand",
+           "telemetry_attrs"]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -93,41 +107,71 @@ def _fit_block(p: int, block: Optional[int], batched: bool = False) -> int:
 # -- the jitted engines (cached per padded shape / config) ---------------------
 
 @functools.lru_cache(maxsize=None)
-def _dist_mult_fn(batched: bool, block: int, interpret: bool):
+def _dist_mult_fn(batched: bool, block: int, interpret: bool,
+                  telemetry: bool = False):
     from ... import kernels
 
     step = (kernels.semiring.frontier_step_batched_pallas if batched
             else kernels.semiring.frontier_step_pallas)
 
-    def run(adj: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def run(adj: jnp.ndarray):
         p = adj.shape[-1]
         eye = jnp.broadcast_to(jnp.eye(p, dtype=jnp.float32), adj.shape)
         dist0 = jnp.where(eye > 0, 0.0, _INF)
 
+        if not telemetry:
+            def cond(state):
+                level, _, _, _, more = state
+                return more & (level <= p)
+
+            def body(state):
+                level, dist, mult, frontier, _ = state
+                x = step(frontier, adj, dist, bm=block, bn=block, bk=block,
+                         interpret=interpret)
+                new = x > 0
+                dist = jnp.where(new, level.astype(jnp.float32), dist)
+                # newly reached pairs carried 0 in mult, so += is the
+                # masked set
+                mult = mult + x
+                return level + 1, dist, mult, x, new.any()
+
+            _, dist, mult, _, _ = jax.lax.while_loop(
+                cond, body, (jnp.int32(1), dist0, eye, eye, jnp.bool_(True)))
+            return dist, mult
+
+        # telemetry variant: the while state additionally carries the
+        # per-level newly-reached pair counts (frontier sizes) — still one
+        # device `while`, zero callbacks; only the RETURNED aux differs,
+        # which is why `telemetry` keys the lru cache
+        sizes0 = jnp.zeros((p + 1, adj.shape[0]) if batched else (p + 1,),
+                           jnp.int32)
+
         def cond(state):
-            level, _, _, _, more = state
+            level, _, _, _, more, _ = state
             return more & (level <= p)
 
         def body(state):
-            level, dist, mult, frontier, _ = state
+            level, dist, mult, frontier, _, sizes = state
             x = step(frontier, adj, dist, bm=block, bn=block, bk=block,
                      interpret=interpret)
             new = x > 0
             dist = jnp.where(new, level.astype(jnp.float32), dist)
-            # newly reached pairs carried 0 in mult, so += is the masked set
             mult = mult + x
-            return level + 1, dist, mult, x, new.any()
+            cnt = jnp.sum(new, axis=(-2, -1), dtype=jnp.int32)
+            sizes = sizes.at[level].set(cnt)
+            return level + 1, dist, mult, x, new.any(), sizes
 
-        _, dist, mult, _, _ = jax.lax.while_loop(
-            cond, body, (jnp.int32(1), dist0, eye, eye, jnp.bool_(True)))
-        return dist, mult
+        level, dist, mult, _, _, sizes = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(1), dist0, eye, eye, jnp.bool_(True), sizes0))
+        return dist, mult, (level - 1, sizes)
 
     return jax.jit(run)
 
 
 def dist_mult_device(adj: jnp.ndarray, block: Optional[int] = None,
-                     interpret: Optional[bool] = None
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                     interpret: Optional[bool] = None,
+                     telemetry: bool = False):
     """Hop distances + shortest-path multiplicities, fully on device.
 
     ``adj`` is a (p, p) or stacked (B, p, p) {0,1} float adjacency whose
@@ -136,12 +180,47 @@ def dist_mult_device(adj: jnp.ndarray, block: Optional[int] = None,
     arrays (dist, mult): dist f32 with +inf for unreachable (phantom
     diagonals included at 0), mult f32 with 1 on the diagonal. One jitted
     call; the while_loop never leaves the device.
+
+    ``telemetry=True`` returns ``(dist, mult, (levels, sizes))`` instead:
+    ``levels`` the int32 count of level iterations executed and ``sizes``
+    an int32 (p+1,) (or (p+1, B) stacked) array of newly-reached pair
+    counts per level — device outputs carried through the same single
+    `while`, no callbacks (see :func:`telemetry_attrs`).
     """
     if interpret is None:
         interpret = _interpret_default()
     p = adj.shape[-1]
     block = _fit_block(p, block, batched=adj.ndim == 3)
-    return _dist_mult_fn(adj.ndim == 3, block, interpret)(adj)
+    return _dist_mult_fn(adj.ndim == 3, block, interpret, telemetry)(adj)
+
+
+def telemetry_attrs(aux) -> Dict[str, object]:
+    """Span attributes from a wavefront telemetry aux pair.
+
+    ``levels`` counts executed level iterations (diameter + 1 confirmation
+    sweep on connected graphs), ``converged_level`` the last level that
+    reached a new pair (= max hop distance), ``frontier_sizes`` the
+    newly-reached pair count per level 1..converged_level (summed over the
+    stack when batched; ``frontier_sizes_per_graph`` keeps the per-graph
+    split).
+    """
+    level, sizes = aux
+    sizes = np.asarray(sizes)
+    levels = int(level)
+    per_graph = sizes if sizes.ndim == 1 else sizes.sum(axis=1)
+    nz = np.flatnonzero(per_graph)
+    last = int(nz.max()) if len(nz) else 0
+    attrs = {
+        "levels": levels,
+        "converged_level": last,
+        "frontier_sizes": per_graph[1:last + 1].tolist(),
+    }
+    if sizes.ndim == 2:
+        attrs["frontier_sizes_per_graph"] = sizes[1:last + 1].T.tolist()
+        attrs["levels_per_graph"] = [
+            int(np.flatnonzero(col).max()) if col.any() else 0
+            for col in sizes.T]
+    return attrs
 
 
 def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None
@@ -149,19 +228,32 @@ def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None
     """Host convenience wrapper: pad -> device engine -> sliced np arrays.
 
     Warns (RuntimeWarning) when a multiplicity exceeds f32's exact-integer
-    range — the engine's counts are f32 on device.
+    range — the engine's counts are f32 on device. Under an enabled
+    `repro.obs` tracer the call is spanned and the device telemetry
+    (levels, frontier sizes) lands in the span's attributes.
     """
     from .paths import _warn_if_inexact
 
     adj = np.asarray(adj, np.float32)
     n = adj.shape[-1]
     p, block = pad_block(n, block, batched=adj.ndim == 3)
-    dist, mult = dist_mult_device(jnp.asarray(pad_operand(adj, p, 0.0)),
-                                  block=block)
-    sl = (Ellipsis, slice(None, n), slice(None, n))
-    mult = np.asarray(mult)[sl]
+    tel = obs.enabled()
+    with obs.span("wavefront.dist_mult", routers=n, padded=p, block=block,
+                  batched=adj.ndim == 3) as sp:
+        padded = pad_operand(adj, p, 0.0)
+        obs.record_h2d(padded.nbytes, "adjacency")
+        out = dist_mult_device(jnp.asarray(padded), block=block,
+                               telemetry=tel)
+        if tel:
+            dist, mult, aux = out
+            sp.set(**telemetry_attrs(aux))
+        else:
+            dist, mult = out
+        sl = (Ellipsis, slice(None, n), slice(None, n))
+        mult = np.asarray(mult)[sl]
+        dist = np.asarray(dist)[sl]
     _warn_if_inexact(mult, use_kernel=True)
-    return np.asarray(dist)[sl], mult
+    return dist, mult
 
 
 @functools.lru_cache(maxsize=None)
@@ -222,10 +314,11 @@ def ecmp_loads_device(dist: jnp.ndarray, mult: jnp.ndarray, adj: jnp.ndarray,
 
 
 @functools.lru_cache(maxsize=None)
-def _squaring_fn(block: int, sub_k: int, max_squarings: int, interpret: bool):
+def _squaring_fn(block: int, sub_k: int, max_squarings: int, interpret: bool,
+                 telemetry: bool = False):
     from ... import kernels
 
-    def run(d: jnp.ndarray) -> jnp.ndarray:
+    def run(d: jnp.ndarray):
         def cond(state):
             i, _, done = state
             return (~done) & (i < max_squarings)
@@ -237,16 +330,19 @@ def _squaring_fn(block: int, sub_k: int, max_squarings: int, interpret: bool):
                 interpret=interpret)
             return i + 1, nxt, jnp.all(nxt == d)
 
-        _, d, _ = jax.lax.while_loop(
+        i, d, _ = jax.lax.while_loop(
             cond, body, (jnp.int32(0), d, jnp.bool_(False)))
-        return d
+        # telemetry: the squaring count already rides the while state —
+        # returning it is free and keys a separate cached jaxpr
+        return (d, i) if telemetry else d
 
     return jax.jit(run)
 
 
 def squaring_apsp_device(d: jnp.ndarray, max_squarings: Optional[int] = None,
                          block: Optional[int] = None,
-                         interpret: Optional[bool] = None) -> jnp.ndarray:
+                         interpret: Optional[bool] = None,
+                         telemetry: bool = False):
     """Min-plus squaring to convergence with the convergence flag on device.
 
     For *weighted* length matrices (hop-distance problems should use
@@ -259,6 +355,10 @@ def squaring_apsp_device(d: jnp.ndarray, max_squarings: Optional[int] = None,
     — and is only a safety cap: the loop exits on the device-computed
     convergence flag, so callers should leave it shape-derived (one compile
     per padded shape) rather than n-derived.
+
+    ``telemetry=True`` returns ``(dist, squarings)`` with the executed
+    squaring count as an int32 device scalar (convergence step telemetry
+    for the MWU oracle's spans).
     """
     from ...kernels import autotune
 
@@ -271,4 +371,4 @@ def squaring_apsp_device(d: jnp.ndarray, max_squarings: Optional[int] = None,
                            bm=block, bn=block, bk=block)
     block = cfg["bm"] if p % cfg["bm"] == 0 else 128
     sub_k = min(cfg["sub_k"], block)
-    return _squaring_fn(block, sub_k, max_squarings, interpret)(d)
+    return _squaring_fn(block, sub_k, max_squarings, interpret, telemetry)(d)

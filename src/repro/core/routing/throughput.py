@@ -36,6 +36,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from ... import obs
 from ..graph import Graph
 
 __all__ = ["max_concurrent_flow", "route_greedy_shortest",
@@ -115,8 +116,16 @@ def _device_apsp_solver(g: Graph, max_squarings: int):
         return base_d.at[src_d, dst_d].set(lengths.astype(jnp.float32))
 
     def solve(lengths: np.ndarray) -> np.ndarray:
+        # the per-round upload is this (2E,) f32 vector — the whole point
+        # of the device-resident oracle; the byte tap proves it stays small
+        obs.record_h2d(lengths.size * 4, "mwu_lengths")
         lm = scatter(jnp.asarray(lengths, jnp.float32))
-        dist = squaring_apsp_device(lm, max_squarings=max_squarings)
+        if obs.enabled():
+            dist, squarings = squaring_apsp_device(
+                lm, max_squarings=max_squarings, telemetry=True)
+            obs.current().set(squarings=int(squarings))
+        else:
+            dist = squaring_apsp_device(lm, max_squarings=max_squarings)
         return np.asarray(dist)[:n, :n]
 
     return solve
@@ -226,47 +235,56 @@ def max_concurrent_flow(
     # device (no per-squaring host sync, no per-round (n, n) re-upload)
     solver = _device_apsp_solver(g, max_squarings) if use_kernel else None
 
-    for rounds in range(1, max_rounds + 1):
-        lengths = weights / caps
-        lengths = np.maximum(lengths, lengths.max() * 1e-12)
-        lm = _length_matrix(g, lengths)
-        if solver is not None:
-            dist_l = solver(lengths)
-        else:
-            from ..analysis.apsp import apsp_from_lengths
+    with obs.span("mwu", cat="throughput", routers=n,
+                  commodities=len(pairs), eps=eps,
+                  max_rounds=max_rounds) as mwu_sp:
+        for rounds in range(1, max_rounds + 1):
+            lengths = weights / caps
+            lengths = np.maximum(lengths, lengths.max() * 1e-12)
+            lm = _length_matrix(g, lengths)
+            if solver is not None:
+                dist_l = solver(lengths)
+            else:
+                from ..analysis.apsp import apsp_from_lengths
 
-            dist_l = apsp_from_lengths(lm, use_kernel=False)
+                dist_l = apsp_from_lengths(lm, use_kernel=False)
 
-        if hop_dist is None:  # first round: drop unreachable commodities
-            hop_dist = dist_l
-            reach = np.isfinite(dist_l[pairs[:, 0], pairs[:, 1]])
-            dropped = int((~reach).sum())
-            pairs, amounts = pairs[reach], amounts[reach]
-            if len(pairs) == 0:
-                raise ValueError("no routable commodity in demand")
+            if hop_dist is None:  # first round: drop unreachable pairs
+                hop_dist = dist_l
+                reach = np.isfinite(dist_l[pairs[:, 0], pairs[:, 1]])
+                dropped = int((~reach).sum())
+                pairs, amounts = pairs[reach], amounts[reach]
+                if len(pairs) == 0:
+                    raise ValueError("no routable commodity in demand")
 
-        # LP-dual certificate for these lengths
-        sp = dist_l[pairs[:, 0], pairs[:, 1]].astype(np.float64)
-        best_ub = min(best_ub, float((caps * lengths).sum()
-                                     / (amounts * sp).sum()))
+            # LP-dual certificate for these lengths
+            sp = dist_l[pairs[:, 0], pairs[:, 1]].astype(np.float64)
+            best_ub = min(best_ub, float((caps * lengths).sum()
+                                         / (amounts * sp).sum()))
 
-        loads_dir = route_greedy_shortest(g, lm, dist_l, pairs, amounts,
-                                          rng, chunk=chunk)
-        sum_loads += loads_dir
-        cong_round = loads_dir[src_e, dst_e] / caps
-        cong_avg = sum_loads[src_e, dst_e] / (rounds * caps)
-        # both the round's flow and the running average route the full
-        # demand; whichever is less congested certifies the better lambda
-        for lb, flow in ((1.0 / cong_round.max(), loads_dir),
-                         (1.0 / cong_avg.max(), sum_loads / rounds)):
-            if lb > best_lb:
-                best_lb, best_flow = lb, flow.copy()
-        if best_ub <= (1.0 + eps) * best_lb:
-            converged = True
-            break
-        step = cong_round / cong_round.max()
-        weights *= 1.0 + eps * step
-        weights /= weights.max()
+            loads_dir = route_greedy_shortest(g, lm, dist_l, pairs,
+                                              amounts, rng, chunk=chunk)
+            sum_loads += loads_dir
+            cong_round = loads_dir[src_e, dst_e] / caps
+            cong_avg = sum_loads[src_e, dst_e] / (rounds * caps)
+            # both the round's flow and the running average route the full
+            # demand; whichever is less congested certifies the better
+            # lambda
+            for lb, flow in ((1.0 / cong_round.max(), loads_dir),
+                             (1.0 / cong_avg.max(), sum_loads / rounds)):
+                if lb > best_lb:
+                    best_lb, best_flow = lb, flow.copy()
+            obs.instant("mwu.round", cat="throughput", round=rounds,
+                        lb=best_lb, ub=best_ub,
+                        gap=best_ub / best_lb if best_lb > 0 else None)
+            if best_ub <= (1.0 + eps) * best_lb:
+                converged = True
+                break
+            step = cong_round / cong_round.max()
+            weights *= 1.0 + eps * step
+            weights /= weights.max()
+        mwu_sp.set(rounds=rounds, converged=converged,
+                   throughput=best_lb, upper_bound=best_ub)
 
     from .assign import directed_to_link_loads
 

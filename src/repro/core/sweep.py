@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from . import costmodel
 from . import topology as topo
 from .graph import Graph
@@ -115,7 +116,7 @@ def equal_cost_graphs(
         try:
             g = topo.by_cost(fam, budget, max_routers=max_routers)
         except ValueError as exc:
-            print(f"[sweep] skipping {fam}: {exc}")
+            obs.log("sweep.skip", family=fam, reason=str(exc))
             continue
         g.validate()
         graphs.append(g)
@@ -244,82 +245,118 @@ def sweep(families: Optional[Sequence[str]] = None,
     single-device engines.
     """
     t0 = time.time()
-    if graphs is None:
-        graphs, budget = equal_cost_graphs(families, budget, ref, max_routers)
-    if not graphs:
-        raise ValueError("sweep has no topologies to compare")
+    with obs.span("sweep", cat="sweep", use_kernel=use_kernel) as root:
+        if graphs is None:
+            with obs.span("sweep.build", cat="sweep"):
+                graphs, budget = equal_cost_graphs(families, budget, ref,
+                                                   max_routers)
+        if not graphs:
+            raise ValueError("sweep has no topologies to compare")
+        root.set(families=len(graphs), routers=max(g.n for g in graphs))
 
-    adj = _stack_adjacency(graphs)
-    if use_kernel:
-        # device-resident chain: upload the padded stack once, run the
-        # wavefront level loop AND the Brandes accumulation on device, and
-        # transfer only the three final matrices back to host. With a
-        # multi-device mesh each device owns a row block of every stacked
-        # problem; only the convergence flag (and one final psum of the
-        # Brandes partials) crosses devices.
-        import jax.numpy as jnp
+        with obs.span("sweep.stack", cat="sweep"):
+            adj = _stack_adjacency(graphs)
+        wf_levels = None
+        if use_kernel:
+            # device-resident chain: upload the padded stack once, run the
+            # wavefront level loop AND the Brandes accumulation on device,
+            # and transfer only the three final matrices back to host.
+            # With a multi-device mesh each device owns a row block of
+            # every stacked problem; only the convergence flag (and one
+            # final psum of the Brandes partials) crosses devices.
+            import jax.numpy as jnp
 
-        from .analysis import distributed as DX
-        from .analysis import wavefront as WF
+            from .analysis import distributed as DX
+            from .analysis import wavefront as WF
 
-        k = adj.shape[-1]
-        if mesh == "auto":
-            mesh = DX.default_mesh(k)
-        if mesh is not None and mesh.size > 1:
-            p, _, block = DX.pad_block_sharded(k, mesh.shape[DX.ROW_AXIS],
-                                               batched=True)
-            adj_d = jnp.asarray(WF.pad_operand(adj, p, 0.0))
-            dist_d, mult_d = DX.dist_mult_sharded(adj_d, mesh, block=block)
-            loads_d = (DX.ecmp_loads_sharded(dist_d, mult_d, adj_d, mesh,
-                                             block=block)
-                       if throughput else None)
+            k = adj.shape[-1]
+            if mesh == "auto":
+                mesh = DX.default_mesh(k)
+            tel = obs.enabled()
+            sharded = mesh is not None and mesh.size > 1
+            with obs.span("sweep.dist_mult", cat="sweep",
+                          stacked=len(graphs), padded=k,
+                          sharded=sharded) as sp:
+                if sharded:
+                    p, _, block = DX.pad_block_sharded(
+                        k, mesh.shape[DX.ROW_AXIS], batched=True)
+                else:
+                    p, block = WF.pad_block(k, batched=True)
+                padded = WF.pad_operand(adj, p, 0.0)
+                adj_d = jnp.asarray(padded)
+                obs.record_h2d(padded.nbytes, "sweep_stack")
+                if sharded:
+                    out = DX.dist_mult_sharded(adj_d, mesh, block=block,
+                                               telemetry=tel)
+                else:
+                    out = WF.dist_mult_device(adj_d, block=block,
+                                              telemetry=tel)
+                if tel:
+                    dist_d, mult_d, aux = out
+                    attrs = WF.telemetry_attrs(aux)
+                    wf_levels = attrs.get("levels_per_graph")
+                    sp.set(**attrs)
+                else:
+                    dist_d, mult_d = out
+            with obs.span("sweep.ecmp_loads", cat="sweep"):
+                if not throughput:
+                    loads_d = None
+                elif sharded:
+                    loads_d = DX.ecmp_loads_sharded(dist_d, mult_d, adj_d,
+                                                    mesh, block=block)
+                else:
+                    loads_d = WF.ecmp_loads_device(dist_d, mult_d, adj_d,
+                                                   block=block)
+            with obs.span("sweep.download", cat="sweep"):
+                dist = np.asarray(dist_d)[:, :k, :k]
+                mult = np.asarray(mult_d)[:, :k, :k].astype(np.float64)
+                loads = (np.asarray(loads_d)[:, :k, :k] if throughput
+                         else None)
+            from .analysis.paths import _warn_if_inexact
+
+            _warn_if_inexact(mult, use_kernel=True)  # device counts are f32
         else:
-            p, block = WF.pad_block(k, batched=True)
-            adj_d = jnp.asarray(WF.pad_operand(adj, p, 0.0))
-            dist_d, mult_d = WF.dist_mult_device(adj_d, block=block)
-            loads_d = (WF.ecmp_loads_device(dist_d, mult_d, adj_d,
-                                            block=block)
-                       if throughput else None)
-        dist = np.asarray(dist_d)[:, :k, :k]
-        mult = np.asarray(mult_d)[:, :k, :k].astype(np.float64)
-        loads = (np.asarray(loads_d)[:, :k, :k] if throughput else None)
-        from .analysis.paths import _warn_if_inexact
+            with obs.span("sweep.dist_mult", cat="sweep",
+                          stacked=len(graphs), oracle=True):
+                count = _batched_count(use_kernel)
+                dist, mult = batched_dist_mult(adj, count)
+            with obs.span("sweep.ecmp_loads", cat="sweep", oracle=True):
+                loads = (ecmp_all_pairs_loads(dist, mult, adj, product=count)
+                         if throughput else None)
 
-        _warn_if_inexact(mult, use_kernel=True)  # device counts are f32
-    else:
-        count = _batched_count(use_kernel)
-        dist, mult = batched_dist_mult(adj, count)
-        loads = (ecmp_all_pairs_loads(dist, mult, adj, product=count)
-                 if throughput else None)
-
-    rows = []
-    for i, g in enumerate(graphs):
-        n = g.n
-        d = dist[i, :n, :n]
-        m = mult[i, :n, :n]
-        off = np.isfinite(d) & (d > 0)
-        spec = g.meta.get("spec")
-        cost = costmodel.cost_report(spec) if spec is not None else {}
-        row = {
-            "family": g.meta["spec"].family if spec else g.name,
-            "params": spec.describe() if spec else g.name,
-            "routers": n,
-            "servers": g.num_servers,
-            "radix": spec.router_radix if spec else g.radix,
-            "diameter": int(d[off].max()) if off.any() else 0,
-            "avg_spl": float(d[off].mean()) if off.any() else 0.0,
-            "mult_mean": float(m[off].mean()) if off.any() else 0.0,
-            "mult_min": float(m[off].min()) if off.any() else 0.0,
-            "cost": cost.get("cost_total"),
-            "power_kw": (cost.get("power_total_w", 0.0) / 1e3
-                         if cost else None),
-            "cables_electrical": cost.get("cables_electrical"),
-            "cables_optical": cost.get("cables_optical"),
-        }
-        if loads is not None:
-            peak = float(loads[i, :n, :n].max())
-            row["tput_lb"] = 1.0 / peak if peak > 0 else 1.0
-        rows.append(row)
+        with obs.span("sweep.rows", cat="sweep"):
+            rows = []
+            for i, g in enumerate(graphs):
+                n = g.n
+                d = dist[i, :n, :n]
+                m = mult[i, :n, :n]
+                off = np.isfinite(d) & (d > 0)
+                spec = g.meta.get("spec")
+                cost = costmodel.cost_report(spec) if spec is not None else {}
+                row = {
+                    "family": g.meta["spec"].family if spec else g.name,
+                    "params": spec.describe() if spec else g.name,
+                    "routers": n,
+                    "servers": g.num_servers,
+                    "radix": spec.router_radix if spec else g.radix,
+                    "diameter": int(d[off].max()) if off.any() else 0,
+                    "avg_spl": float(d[off].mean()) if off.any() else 0.0,
+                    "mult_mean": float(m[off].mean()) if off.any() else 0.0,
+                    "mult_min": float(m[off].min()) if off.any() else 0.0,
+                    "cost": cost.get("cost_total"),
+                    "power_kw": (cost.get("power_total_w", 0.0) / 1e3
+                                 if cost else None),
+                    "cables_electrical": cost.get("cables_electrical"),
+                    "cables_optical": cost.get("cables_optical"),
+                }
+                if loads is not None:
+                    peak = float(loads[i, :n, :n].max())
+                    row["tput_lb"] = 1.0 / peak if peak > 0 else 1.0
+                if wf_levels is not None:
+                    # device telemetry: BFS levels this family's wavefront
+                    # actually ran (= its diameter on connected graphs)
+                    row["wavefront_levels"] = int(wf_levels[i])
+                rows.append(row)
     return {
         "rows": rows,
         "budget": budget,
@@ -401,9 +438,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="numpy/jnp oracle products instead of Pallas")
     ap.add_argument("--out", default=None,
                     help="directory for comparison.{txt,json}")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable tracing and write a Chrome trace-event "
+                         "file (load in https://ui.perfetto.dev or feed to "
+                         "python -m repro.obs.report)")
     ap.add_argument("--check", action="store_true",
                     help="CI gate: verify sizers + connectivity, no sweep")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
 
     if args.check:
         failures = check_families()
@@ -427,7 +471,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         (out / "comparison.txt").write_text(table + "\n")
         (out / "comparison.json").write_text(
             json.dumps(result, indent=1, default=str))
-        print(f"[sweep] wrote {out}/comparison.{{txt,json}}")
+        obs.log("sweep.wrote", txt=str(out / "comparison.txt"),
+                json=str(out / "comparison.json"))
+    if args.trace:
+        obs.export(args.trace)
+        obs.log("sweep.trace", path=args.trace)
     return 0
 
 

@@ -123,25 +123,50 @@ def save_entry(op: str, key: str, config: Dict[str, int]) -> pathlib.Path:
     return path
 
 
+_DECISIONS_SEEN: set = set()
+
+
+def _note_decision(op: str, key: str, cfg: Dict[str, int],
+                   tuned, overrides) -> None:
+    """Under an enabled tracer, record which table entry won ``resolve``
+    and why — once per (op, shape bucket) so the hot path stays hot."""
+    from .. import obs
+
+    if not obs.enabled() or (op, key) in _DECISIONS_SEEN:
+        return
+    _DECISIONS_SEEN.add((op, key))
+    source = {kk: ("override" if kk in overrides
+                   and overrides[kk] is not None
+                   else "tuned" if tuned and kk in tuned else "default")
+              for kk in cfg}
+    obs.instant("autotune.resolve", cat="kernels", op=op, shape=key,
+                config=dict(cfg), source=source,
+                tuned_entry=dict(tuned) if tuned else None)
+
+
 def resolve(op: str, m: int, n: int, k: int, **overrides) -> Dict[str, int]:
     """Final config for one op call: overrides > tuned table > op default.
 
     Only keys the op's default config carries are returned, so VPU-only
     knobs (``sub_k``) never leak into MXU-path calls. Block shapes are
     clamped to the bucketed problem size (a 512-wide tile is useless on a
-    256-wide padded matrix).
+    256-wide padded matrix). Under an enabled `repro.obs` tracer the
+    decision (winning entry + per-knob source) is emitted as an
+    ``autotune.resolve`` instant event, once per (op, shape bucket).
     """
+    key = shape_key(m, n, k)
     cfg = dict(DEFAULTS[op])
-    tuned = load_table().get(op, {}).get(shape_key(m, n, k))
+    tuned = load_table().get(op, {}).get(key)
     if tuned:
         cfg.update({kk: vv for kk, vv in tuned.items() if kk in cfg})
     cfg.update({kk: vv for kk, vv in overrides.items()
                 if kk in cfg and vv is not None})
-    bucket = [int(s) for s in shape_key(m, n, k).split("x")]
+    bucket = [int(s) for s in key.split("x")]
     for dim, limit in zip(("bm", "bn", "bk"), bucket):
         cfg[dim] = min(cfg[dim], limit)
     if "sub_k" in cfg:
         cfg["sub_k"] = min(cfg["sub_k"], cfg["bk"])
+    _note_decision(op, key, cfg, tuned, overrides)
     return cfg
 
 

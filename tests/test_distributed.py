@@ -335,3 +335,80 @@ def test_16k_tiled_out_of_core_under_memory_budget():
     print(f"[16k] peak_rss={summary['peak_rss_mb']}MB "
           f"single_buffer={summary['single_buffer_mb']}MB "
           f"elapsed={summary['elapsed_s']}s")
+
+
+# -- observability: sharded telemetry + jaxpr identity ------------------------
+
+@needs2
+def test_sharded_disabled_jaxpr_is_bit_identical():
+    """Enabling the tracer must leave the telemetry=False shard_map jaxpr
+    byte-equal, and the telemetry=True variant (psum'd per-level counts as
+    replicated aux outputs) must still be one `while` with no callbacks."""
+    from repro import obs
+
+    g = T.make("slimfly", q=5)
+    mesh = D.device_mesh(2)
+    p, row, col = D.pad_block_sharded(g.n, 2)
+    x = jnp.asarray(WF.pad_operand(g.adjacency_dense(np.float32), p, 0.0))
+    base = str(jax.make_jaxpr(
+        D._dist_mult_sharded_fn(mesh, False, row, col, True))(x))
+    obs.enable()
+    try:
+        again = str(jax.make_jaxpr(
+            D._dist_mult_sharded_fn(mesh, False, row, col, True))(x))
+    finally:
+        obs.disable()
+        obs.reset()
+    assert again == base
+    jaxpr = jax.make_jaxpr(
+        D._dist_mult_sharded_fn(mesh, False, row, col, True, True))(x)
+    prims = set()
+    _collect(jaxpr.jaxpr, prims)
+    assert "while" in prims, sorted(prims)
+    leaks = [q for q in prims if "callback" in q or q == "infeed"]
+    assert not leaks, leaks
+
+
+@needs2
+def test_sharded_telemetry_matches_host_oracle():
+    """The mesh-wide aux (globally psum'd per-level newly-reached counts)
+    must agree with the host BFS truth and with the single-device engine's
+    telemetry convention."""
+    g = T.make("jellyfish", n=137, r=5, seed=3)
+    adj = g.adjacency_dense(np.float32)
+    for shards in _shard_counts():
+        mesh = D.device_mesh(shards)
+        p, _, block = D.pad_block_sharded(g.n, shards)
+        x = jnp.asarray(WF.pad_operand(adj, p, 0.0))
+        dist, mult, aux = D.dist_mult_sharded(x, mesh, block=block,
+                                              telemetry=True)
+        d = np.asarray(dist)[:g.n, :g.n]
+        attrs = WF.telemetry_attrs(aux)
+        diam = int(d[np.isfinite(d)].max())
+        assert attrs["converged_level"] == diam
+        assert attrs["levels"] == diam + 1
+        assert attrs["frontier_sizes"] == [int((d == k).sum())
+                                           for k in range(1, diam + 1)]
+
+
+@needs2
+def test_sharded_batched_telemetry_per_graph():
+    graphs = [T.make("slimfly", q=5), T.make("hypercube", dim=5)]
+    k = 128
+    stack = np.zeros((len(graphs), k, k), np.float32)
+    for i, g in enumerate(graphs):
+        stack[i, :g.n, :g.n] = g.adjacency_dense(np.float32)
+    mesh = D.device_mesh(2)
+    p, _, block = D.pad_block_sharded(k, 2, batched=True)
+    x = jnp.asarray(WF.pad_operand(stack, p, 0.0))
+    dist, mult, aux = D.dist_mult_sharded(x, mesh, block=block,
+                                          telemetry=True)
+    attrs = WF.telemetry_attrs(aux)
+    for i, g in enumerate(graphs):
+        d = np.asarray(dist)[i, :g.n, :g.n]
+        diam = int(d[np.isfinite(d)].max())
+        assert attrs["levels_per_graph"][i] == diam
+        sizes = attrs["frontier_sizes_per_graph"][i]
+        assert sizes[:diam] == [int((d == k_).sum())
+                                for k_ in range(1, diam + 1)]
+        assert not any(sizes[diam:])

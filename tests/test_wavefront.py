@@ -191,3 +191,125 @@ def test_autotune_resolve_precedence(tmp_path, monkeypatch):
 def test_autotune_shape_bucketing():
     assert autotune.shape_key(100, 128, 129) == "128x128x256"
     assert autotune.shape_key(1024, 1000, 513) == "1024x1024x1024"
+
+
+# -- observability: jaxpr identity + in-loop device telemetry -----------------
+
+def test_observability_disabled_jaxpr_is_bit_identical():
+    """Enabling the tracer must not perturb the untelemetered engine: the
+    telemetry=False jaxpr is byte-equal whether observability was ever on,
+    and the telemetry=True jaxpr (extra aux outputs) is still one device
+    `while` with no callbacks."""
+    from repro import obs
+
+    g = T.make("slimfly", q=5)
+    p, block = WF.pad_block(g.n)
+    x = jnp.asarray(WF.pad_operand(g.adjacency_dense(np.float32), p, 0.0))
+    base = str(jax.make_jaxpr(WF._dist_mult_fn(False, block, True, False))(x))
+    obs.enable()
+    try:
+        again = str(
+            jax.make_jaxpr(WF._dist_mult_fn(False, block, True, False))(x))
+        tele = str(
+            jax.make_jaxpr(WF._dist_mult_fn(False, block, True, True))(x))
+    finally:
+        obs.disable()
+        obs.reset()
+    assert again == base
+    assert tele != base
+    jaxpr = jax.make_jaxpr(WF._dist_mult_fn(False, block, True, True))(x)
+    prims = set()
+    _collect_primitives(jaxpr.jaxpr, prims)
+    assert "while" in prims, sorted(prims)
+    leaks = [q for q in prims if "callback" in q or q == "infeed"]
+    assert not leaks, leaks
+
+
+@pytest.mark.parametrize("fam", ["slimfly", "fattree", "jellyfish",
+                                 "hypercube", "dragonfly"])
+def test_wavefront_telemetry_matches_host_bfs_oracle(fam):
+    """The aux device outputs against the host BFS truth: levels executed =
+    diameter + 1 confirmation sweep, frontier_sizes[k] = pairs first
+    reached at hop k = count of dist == k."""
+    g = T.by_servers(fam, 120)
+    p, block = WF.pad_block(g.n)
+    padded = WF.pad_operand(g.adjacency_dense(np.float32), p, 0.0)
+    dist, mult, aux = WF.dist_mult_device(jnp.asarray(padded), block=block,
+                                          telemetry=True)
+    d = np.asarray(dist)[:g.n, :g.n]
+    np.testing.assert_array_equal(d, _bfs_dist(g))
+    attrs = WF.telemetry_attrs(aux)
+    diam = int(d[np.isfinite(d)].max())
+    assert attrs["converged_level"] == diam
+    assert attrs["levels"] == diam + 1  # the convergence-confirming sweep
+    assert attrs["frontier_sizes"] == [int((d == k).sum())
+                                       for k in range(1, diam + 1)]
+
+
+def test_wavefront_telemetry_batched_per_graph():
+    graphs = [T.make("slimfly", q=5), T.make("torus", dims=(4, 5)),
+              T.make("hypercube", dim=5)]
+    p = 128
+    stack = np.zeros((len(graphs), p, p), np.float32)
+    for i, g in enumerate(graphs):
+        stack[i, :g.n, :g.n] = g.adjacency_dense(np.float32)
+    dist, mult, aux = WF.dist_mult_device(jnp.asarray(stack), telemetry=True)
+    attrs = WF.telemetry_attrs(aux)
+    deepest = attrs["converged_level"]
+    for i, g in enumerate(graphs):
+        d = np.asarray(dist)[i, :g.n, :g.n]
+        diam = int(d[np.isfinite(d)].max())
+        assert attrs["levels_per_graph"][i] == diam
+        sizes = attrs["frontier_sizes_per_graph"][i]
+        assert len(sizes) == deepest  # padded to the deepest graph
+        assert sizes[:diam] == [int((d == k).sum())
+                                for k in range(1, diam + 1)]
+        assert not any(sizes[diam:])  # zero-filled past its own diameter
+    assert deepest == max(attrs["levels_per_graph"])
+
+
+def test_squaring_telemetry_reports_convergence_step():
+    g = T.make("slimfly", q=5)
+    p, _ = WF.pad_block(g.n)
+    seed = np.full((p, p), np.float32(np.inf), np.float32)
+    np.fill_diagonal(seed, 0.0)
+    seed[:g.n, :g.n] = np.where(
+        g.adjacency_dense(np.float32) > 0, np.float32(1), np.float32(np.inf))
+    np.fill_diagonal(seed[:g.n, :g.n], 0.0)
+    plain = WF.squaring_apsp_device(jnp.asarray(seed))
+    dist, squarings = WF.squaring_apsp_device(jnp.asarray(seed),
+                                              telemetry=True)
+    np.testing.assert_array_equal(np.asarray(dist), np.asarray(plain))
+    cap = max(1, int(np.ceil(np.log2(p))))
+    assert 1 <= int(squarings) <= cap
+
+
+def test_wavefront_host_wrapper_spans_under_tracing():
+    """Under an enabled tracer the host wrapper spans the call, folds the
+    device telemetry into the span attrs, and accounts the adjacency
+    upload bytes — while returning exactly the usual (dist, mult)."""
+    from repro import obs
+
+    g = T.make("slimfly", q=5)
+    adj = g.adjacency_dense(np.float32)
+    want_d, want_m = WF.wavefront_dist_mult(adj)
+    obs.disable()
+    obs.reset()
+    obs.meters.reset()
+    obs.enable()
+    try:
+        dist, mult = WF.wavefront_dist_mult(adj)
+        events = obs.events()
+        h2d = obs.snapshot().get("h2d_bytes.adjacency", {})
+    finally:
+        obs.disable()
+        obs.reset()
+        obs.meters.reset()
+    np.testing.assert_array_equal(dist, want_d)
+    np.testing.assert_array_equal(mult, want_m)
+    (span,) = [ev for ev in events if ev["name"] == "wavefront.dist_mult"]
+    diam = int(want_d[np.isfinite(want_d)].max())
+    assert span["args"]["converged_level"] == diam
+    assert span["args"]["levels"] == diam + 1
+    assert span["args"]["h2d_bytes"] > 0
+    assert h2d.get("value", 0) == span["args"]["h2d_bytes"]
