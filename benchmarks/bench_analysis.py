@@ -141,7 +141,7 @@ def _timed(fn, *args, repeats: int = 1, **kw):
 
 def baseline(quick: bool = False) -> dict:
     """Headline perf-trajectory numbers for the repo-root baseline artifact
-    (currently BENCH_5.json; see `benchmarks.run.BASELINE_NAME`).
+    (currently BENCH_8.json; see `benchmarks.run.BASELINE_NAME`).
 
     Measures the device-resident wavefront stack against the host-looped
     reference on the SAME interpret-mode kernel backend at fixed sizes:
@@ -158,7 +158,7 @@ def baseline(quick: bool = False) -> dict:
     The acceptance gate (`speedup >= 2x` on analyze at 1024 routers) rides
     on these numbers; `python -m benchmarks.run --baseline` writes them to
     the repo-root artifact that CI uploads per run, and
-    `--gate BENCH_4.json` fails the job if any shared speedup column loses
+    `--gate BENCH_5.json` fails the job if any shared speedup column loses
     more than 30% against the previous PR's committed baseline.
 
     With more than one jax device visible (the fake-device recipe) an extra
@@ -254,6 +254,60 @@ def baseline(quick: bool = False) -> dict:
         "streamed_ms": round(t_tiled * 1e3, 1),
         "device_ms": out["analyze"]["device_ms"],
     }
+
+    # -- packed cells: int16/uint32 tiles + uint8 panels through the same
+    # streaming pump (bit-equal where values fit; the trajectory column is
+    # the streamed ms next to the f32 pump's)
+    from repro.kernels.semiring import DIST_UNREACHED
+
+    (dist_p, mult_p), t_packed = _timed(
+        lambda: DX.tiled_dist_mult(g, tile_rows=n // 4, adjacency_budget=1,
+                                   packed=True))
+    dp = np.where(dist_p == DIST_UNREACHED, np.inf, dist_p)
+    np.testing.assert_array_equal(dp.astype(np.float32), dist_dev)
+    np.testing.assert_array_equal(mult_p.astype(np.float32), mult_dev)
+    out["packed"] = {
+        "family": g.name, "routers": n, "tile_rows": n // 4,
+        "streamed_ms": round(t_packed * 1e3, 1),
+        "f32_streamed_ms": out["tiled"]["streamed_ms"],
+        "cell_bytes": 6, "f32_cell_bytes": 8,
+        "panel_bytes_speedup": 4.0,   # uint8 vs f32 adjacency panels
+    }
+
+    # -- sampled-sources estimator vs the exact streamed pass -------------
+    from repro.core.analysis.estimator import sampled_sources_summary
+
+    k = 8 if quick else 32
+    est, t_est = _timed(lambda: sampled_sources_summary(g, k=k, seed=0))
+    out["estimator"] = {
+        "family": g.name, "routers": n, "sampled_sources": k,
+        "sampled_ms": round(t_est * 1e3, 1),
+        "exact_streamed_ms": out["packed"]["streamed_ms"],
+        "speedup": round(t_packed / t_est, 2),
+        "avg_spl": est["estimates"]["avg_spl"]["value"],
+        "avg_spl_ci95": est["estimates"]["avg_spl"]["ci95"],
+    }
+
+    # -- the committed 100k extreme-sweep artifact, summarized ------------
+    # (the sweep itself is an offline run — `python -m repro.core.sweep
+    # --extreme 100000`; CI gates the committed rows' RSS/runtime budgets
+    # in tests/test_estimator.py, not by re-running it)
+    import json
+    import pathlib
+
+    xart = (pathlib.Path(__file__).resolve().parents[1]
+            / "experiments" / "extreme" / "extreme.json")
+    if xart.exists():
+        xres = json.loads(xart.read_text())
+        rows_ok = [r for r in xres["rows"] if "error" not in r]
+        out["extreme_100k"] = {
+            "families": len(xres["rows"]),
+            "target_routers": xres["target_routers"],
+            "k_sources": xres["k_sources"],
+            "min_routers": min(r["routers"] for r in rows_ok),
+            "max_peak_rss_mb": max(r["peak_rss_mb"] for r in rows_ok),
+            "total_elapsed_s": round(sum(r["elapsed_s"] for r in rows_ok), 1),
+        }
 
     # -- row-sharded wavefront (only when a multi-device mesh is up) ------
     import jax

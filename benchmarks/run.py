@@ -1,8 +1,8 @@
 """Benchmark harness — one bench per paper table/figure.
 
   python -m benchmarks.run [--quick] [--only generation,analysis,...]
-  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_5.json
-  python -m benchmarks.run --baseline --gate BENCH_4.json   # CI perf gate
+  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_8.json
+  python -m benchmarks.run --baseline --gate BENCH_5.json   # CI perf gate
 
   generation   Table-1 analogue: 10k/100k/1M-server generation scalability
   analysis     Table-2 analogue: per-metric analysis cost
@@ -11,8 +11,9 @@
   roofline     the 40-cell dry-run roofline table (reads experiments/dryrun)
 
 ``--baseline`` runs the headline device-resident-vs-host-loop comparison
-(`bench_analysis.baseline`) and writes the repo-root ``BENCH_5.json``
+(`bench_analysis.baseline`) and writes the repo-root ``BENCH_8.json``
 trajectory artifact (single-graph analyze, sweep chain, throughput rounds,
+packed/estimator trajectory,
 with speedups over the host-looped reference) that CI uploads per run, so
 future PRs have a fixed-size perf trajectory to compare against.
 
@@ -46,7 +47,7 @@ OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 #: this PR sequence's baseline artifact (previous PRs' files stay committed
 #: at the repo root, giving the trajectory its history)
-BASELINE_NAME = "BENCH_5.json"
+BASELINE_NAME = "BENCH_8.json"
 
 #: a shared speedup column may lose at most this fraction vs the reference
 GATE_TOLERANCE = 0.30

@@ -12,8 +12,11 @@ from .wavefront import (  # noqa: F401
     wavefront_dist_mult,
 )
 from .distributed import (  # noqa: F401
-    default_mesh, device_mesh, dist_mult_sharded, ecmp_loads_sharded,
-    sharded_dist_mult, tiled_dist_mult, tiled_dist_mult_tiles, tiled_summary,
+    composed_dist_mult_tiles, default_mesh, device_mesh, dist_mult_sharded,
+    ecmp_loads_sharded, sharded_dist_mult, tiled_dist_mult,
+    tiled_dist_mult_tiles, tiled_summary,
 )
+from .engine_select import EnginePlan, resolve_engine  # noqa: F401
+from .estimator import bootstrap_ci, sampled_sources_summary  # noqa: F401
 from .spectral import fiedler_value, spectral_bounds  # noqa: F401
 from .histograms import path_length_histogram  # noqa: F401

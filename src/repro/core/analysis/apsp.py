@@ -44,33 +44,32 @@ def apsp_dense(g: Graph, use_kernel: bool = True,
     (ceil(log2(diameter)) products); it is also the ``use_kernel=False``
     default, running the jnp oracle product with a host-side loop.
 
-    Extreme-scale knobs (`analysis.distributed`): ``mesh`` runs the
+    Extreme-scale knobs (`analysis.distributed`, resolved by
+    `engine_select.resolve_engine` — see its matrix): ``mesh`` runs the
     wavefront row-sharded over a 1-D device mesh (bit-equal results);
-    ``tile_rows`` runs the out-of-core tiled engine instead — source rows
-    stream through the kernels tile by tile, adjacency panels are built
-    from CSR, and no N x N device buffer ever exists (still assembles the
-    full host result; stream tiles yourself via
-    `distributed.tiled_dist_mult_tiles` to avoid that too).
+    ``tile_rows`` runs the out-of-core tiled engine — source rows stream
+    through the kernels tile by tile, adjacency panels are built from CSR,
+    and no N x N device buffer ever exists (still assembles the full host
+    result; stream tiles yourself via `distributed.tiled_dist_mult_tiles`
+    to avoid that too). Both together compose: sharded adjacency panels x
+    streamed source tiles (`distributed.composed_dist_mult_tiles`).
     """
-    if tile_rows is not None:
-        if method not in (None, "wavefront") or not use_kernel:
-            raise ValueError(
-                f"tile_rows runs the tiled wavefront kernel engine — it "
-                f"cannot honor method={method!r} / use_kernel={use_kernel}")
+    from .engine_select import resolve_engine
+
+    plan = resolve_engine(use_kernel=use_kernel, method=method, mesh=mesh,
+                          tile_rows=tile_rows)
+    if plan.engine in ("tiled", "composed"):
         from .distributed import tiled_dist_mult
 
-        dist, _ = tiled_dist_mult(g, tile_rows=tile_rows, block=block)
+        dist, _ = tiled_dist_mult(g, tile_rows=plan.tile_rows or 512,
+                                  block=block, mesh=plan.mesh)
         return dist
-    if method is None:
-        method = "wavefront" if use_kernel else "squaring"
-    if method == "wavefront":
+    if plan.engine in ("wavefront", "sharded"):
         from .distributed import sharded_dist_mult
 
         dist, _ = sharded_dist_mult(g.adjacency_dense(np.float32),
-                                    mesh=mesh, block=block)
+                                    mesh=plan.mesh, block=block)
         return dist
-    if method != "squaring":
-        raise ValueError(f"unknown APSP method {method!r}")
     return _apsp_squaring(g.distance_seed(), g.n, use_kernel,
                           block or 256, max_squarings)
 

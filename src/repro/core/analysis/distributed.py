@@ -23,12 +23,31 @@ makes it *scale past one buffer*. Two regimes, same kernels, same numbers:
   multiplicity at >= 16k routers on a laptop-class host; peak memory is
   O(tile_rows x N + panel_rows x N) instead of O(N^2).
 
+* **Composed: sharding x streaming** (:func:`composed_dist_mult_tiles`, or
+  just pass ``mesh=`` to the tiled entry points): each mesh shard owns the
+  ``(N/P, N)`` row block of the adjacency — built shard-by-shard from CSR
+  through the same reused staging pump, so neither the dense N x N matrix
+  nor a replicated per-device copy ever exists — plus its row slice of the
+  source tile's dist / mult / frontier. The level loop stays ONE jitted
+  `lax.while_loop` with the psum convergence flag; inside it a
+  `fori_loop` ring rotates the adjacency panels (`lax.ppermute`) so every
+  shard sees every K-slab once per level. Per-device adjacency memory is
+  N^2/P x cell bytes; source tiles stream through the mesh exactly like
+  the single-device tiled engine.
+
+All engines take ``packed=True`` to shrink the cell: int16 distances
+(``DIST_UNREACHED`` = int16 max plays +inf), saturating uint32
+multiplicities (clamped at ``MULT_SAT`` = 2**24, the f32 exact-integer
+ceiling — never wrapped), uint8 {0,1} adjacency panels. Resident bytes and
+streamed bytes drop 2-4x; results are bit-equal to f32 wherever values fit.
+
 Bit-equality with the single-device wavefront is *by construction*, not by
 luck: distances are small integers and multiplicities are integer counts,
 so every partial sum an f32 row-shard or K-panel produces is exact while
 counts stay below 2**24 — splitting the M rows over devices or the K
-reduction over panels cannot change a single bit. (ECMP loads divide by
-sigma, so the sharded accumulation matches to f32 round-off, not bitwise.)
+reduction over panels (or the composed engine's ring order) cannot change
+a single bit. (ECMP loads divide by sigma, so the sharded accumulation
+matches to f32 round-off, not bitwise.)
 
 The module is import-light: jax device state is only touched when an engine
 actually runs, so `XLA_FLAGS` recipes keep working.
@@ -50,7 +69,8 @@ __all__ = [
     "pad_block_sharded",
     "dist_mult_sharded", "sharded_dist_mult", "ecmp_loads_sharded",
     "tiled_dist_mult", "tiled_dist_mult_tiles", "tiled_summary",
-    "bfs_dist_sigma",
+    "composed_dist_mult_tiles",
+    "bfs_dist_sigma", "widest_divisor_block",
 ]
 
 _INF = jnp.float32(jnp.inf)
@@ -458,6 +478,45 @@ def _largest_divisor_block(size: int, cap: int) -> int:
     return b
 
 
+def widest_divisor_block(size: int, cap: int) -> int:
+    """Largest multiple of ``_TILE`` <= cap dividing ``size`` — ANY
+    multiplier, not just powers of two.
+
+    100k-class padded extents rarely carry big power-of-two factors
+    (104960 = 2^9 x 5 x 41: `_largest_divisor_block` stops at 512, a
+    205-block column grid), but they do carry big 128-multiples (10496 =
+    128 x 82). The extreme sweep picks its ``block=`` with this so each
+    level stays a handful of wide gemm blocks instead of tens of
+    thousands of interpret-mode dispatches. ``size`` must be a multiple
+    of ``_TILE`` (padded extents always are).
+    """
+    q = size // _TILE
+    qcap = max(1, cap // _TILE)
+    best = 1
+    d = 1
+    while d * d <= q:
+        if q % d == 0:
+            if d <= qcap:
+                best = max(best, d)
+            if q // d <= qcap:
+                best = max(best, q // d)
+        d += 1
+    return best * _TILE
+
+
+def _record_panel(nbytes: int, dtype, h2d: bool = True) -> None:
+    """Pump accounting shared by the tiled and composed engines: total bytes
+    streamed through the staging buffer plus a per-dtype panel-size gauge
+    (``h2d=False`` for host-side assembly passes that upload elsewhere)."""
+    from ... import obs
+
+    if h2d:
+        obs.record_h2d(nbytes, "panel")
+    obs.counter("pump.bytes_streamed").add(nbytes)
+    obs.gauge(f"pump.panel_mb.{np.dtype(dtype).name}").set(
+        round(nbytes / 2**20, 3))
+
+
 @functools.lru_cache(maxsize=None)
 def _panel_accumulate_fn(bm: int, bn: int, bk: int, interpret: bool):
     from ...kernels.semiring import COUNTING, semiring_matmul_pallas
@@ -465,17 +524,33 @@ def _panel_accumulate_fn(bm: int, bn: int, bk: int, interpret: bool):
     def run(x, frontier, panel, k0):
         kp = panel.shape[0]
         f_slab = jax.lax.dynamic_slice_in_dim(frontier, k0, kp, axis=1)
+        # out_dtype pins the accumulator to f32: packed pumps dot a uint32
+        # frontier against a uint8 panel (the kernel casts in-register) and
+        # the cross-panel accumulator must stay the exact f32 partial sum
         (term,) = semiring_matmul_pallas(
             COUNTING, (f_slab,), (panel,), bm=bm, bn=bn,
-            bk=min(bk, kp), interpret=interpret)
+            bk=min(bk, kp), interpret=interpret, out_dtype=jnp.float32)
         return x + term
 
     return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=None)
-def _tile_level_fn(bm: int, bn: int, bk: int, interpret: bool):
-    from ...kernels.semiring import frontier_step_pallas
+def _tile_level_fn(bm: int, bn: int, bk: int, interpret: bool,
+                   packed: bool = False):
+    from ...kernels.semiring import (frontier_step_packed_pallas,
+                                     frontier_step_pallas)
+
+    if packed:
+        def run(frontier, adj, dist, mult, level):
+            x = frontier_step_packed_pallas(frontier, adj, dist, bm=bm,
+                                            bn=bn, bk=bk,
+                                            interpret=interpret)
+            new = x > 0
+            dist = jnp.where(new, level.astype(jnp.int16), dist)
+            return dist, mult + x, x, new.any()
+
+        return jax.jit(run)
 
     def run(frontier, adj, dist, mult, level):
         x = frontier_step_pallas(frontier, adj, dist, bm=bm, bn=bn,
@@ -488,7 +563,22 @@ def _tile_level_fn(bm: int, bn: int, bk: int, interpret: bool):
 
 
 @functools.lru_cache(maxsize=None)
-def _mask_update_fn():
+def _mask_update_fn(packed: bool = False):
+    from ...kernels.semiring import DIST_UNREACHED, MULT_SAT
+
+    if packed:
+        def run(x, dist, mult, level):
+            # x is the exact f32 panel-accumulated product; clamp at
+            # MULT_SAT on the way into the uint32 cell — saturate, never
+            # wrap (a stored MULT_SAT marks a lower bound)
+            new = (x > 0) & (dist == DIST_UNREACHED)
+            xs = jnp.where(new, jnp.minimum(x, float(MULT_SAT)),
+                           0.0).astype(jnp.uint32)
+            dist = jnp.where(new, level.astype(jnp.int16), dist)
+            return dist, mult + xs, xs, new.any()
+
+        return jax.jit(run)
+
     def run(x, dist, mult, level):
         new = (x > 0) & ~jnp.isfinite(dist)
         x = jnp.where(new, x, 0.0)
@@ -498,16 +588,71 @@ def _mask_update_fn():
     return jax.jit(run)
 
 
+def _resolve_source_ids(n: int, sources, source_ids
+                        ) -> Tuple[np.ndarray, Optional[int]]:
+    """(ids array, base) for the tile pumps: ``base`` is the router id of
+    the first row when the ids are a contiguous range (yields stay absolute
+    row indices, the legacy contract) and None for an arbitrary id list
+    (yields index the ids list)."""
+    if source_ids is not None:
+        if sources is not None:
+            raise ValueError("pass sources=(lo, hi) or source_ids=, "
+                             "not both")
+        ids = np.asarray(source_ids, np.int64).ravel()
+        if len(ids) == 0 or ids.min() < 0 or ids.max() >= n:
+            raise ValueError(f"source_ids must be non-empty router ids "
+                             f"in [0, {n})")
+        return ids, None
+    lo, hi = (0, n) if sources is None else sources
+    if not (0 <= lo < hi <= n):
+        raise ValueError(f"sources {sources!r} outside [0, {n})")
+    return np.arange(lo, hi, dtype=np.int64), lo
+
+
+def _seed_tile(ids: np.ndarray, tp: int, pc: int, packed: bool):
+    """(frontier/mult seed, dist seed) host arrays for one source tile:
+    rows 0..len(ids) seed router columns ``ids``; padding rows are inert
+    phantom sources (frontier 0 everywhere, dist all-unreached)."""
+    from ...kernels.semiring import DIST_UNREACHED
+
+    t = len(ids)
+    if packed:
+        eye = np.zeros((tp, pc), np.uint32)
+        seed = np.full((tp, pc), DIST_UNREACHED, np.int16)
+        eye[np.arange(t), ids] = 1
+        seed[np.arange(t), ids] = 0
+    else:
+        eye = np.zeros((tp, pc), np.float32)
+        seed = np.full((tp, pc), np.inf, np.float32)
+        eye[np.arange(t), ids] = 1.0
+        seed[np.arange(t), ids] = 0.0
+    return eye, seed
+
+
+def _tile_shape(t: int, cap: int = 512) -> Tuple[int, int]:
+    """(padded tile rows, row block) for a t-row source tile."""
+    if t <= cap:
+        tp = t + ((-t) % 8)       # f32 sublane tile; one row block
+        return tp, tp
+    # big tiles pad to the 128 lane tile (<= 127 phantom rows) so the row
+    # block never degrades below 128 — interpret mode pays per grid program
+    # (see _largest_divisor_block)
+    tp = _pad128(t)
+    return tp, _largest_divisor_block(tp, cap)
+
+
 def tiled_dist_mult_tiles(
         source, tile_rows: int = 512, panel_rows: Optional[int] = None,
         sources: Optional[Tuple[int, int]] = None,
+        source_ids=None,
         adjacency_budget: int = _ADJ_BUDGET,
         block: Optional[int] = None, interpret: Optional[bool] = None,
+        packed: bool = False, mesh=None,
 ) -> Iterator[Tuple[int, int, np.ndarray, np.ndarray]]:
     """Out-of-core exact dist+mult, one source tile at a time.
 
-    Yields ``(r0, r1, dist_tile, mult_tile)`` with (r1 - r0, n) float32
-    tiles for source rows [r0, r1) — bit-equal to the corresponding rows of
+    Yields ``(r0, r1, dist_tile, mult_tile)`` with (r1 - r0, n) tiles for
+    source rows [r0, r1) — bit-equal to the corresponding rows of
     `wavefront.wavefront_dist_mult` (integer-valued f32 partials are exact,
     so neither the row tiling nor the K-panel split changes a bit).
 
@@ -518,9 +663,25 @@ def tiled_dist_mult_tiles(
     the engine streams ``(panel_rows, n)`` panels through one reused host
     staging buffer and applies the first-reach mask on the accumulated
     (tile, n) product — peak memory O(tile_rows x n + panel_rows x n).
+
     ``sources=(lo, hi)`` restricts to a row range (tiles are independent,
-    so out-of-core runs shard trivially across processes too).
+    so out-of-core runs shard trivially across processes too);
+    ``source_ids=`` takes an arbitrary id array instead (the sampled-
+    sources estimator's path) — tiles then cover ``ids[r0:r1]`` and the
+    yielded (r0, r1) index the ids list, not router rows. ``packed=True``
+    shrinks every cell (uint8 panels, int16 dist, uint32 mult saturating at
+    MULT_SAT — see the module docstring) and yields (int16, uint32) tiles.
+    ``mesh=`` composes with a multi-device row mesh: the pump delegates to
+    :func:`composed_dist_mult_tiles`, which shards the adjacency panels
+    over the mesh instead of streaming them through one device.
     """
+    if mesh is not None and mesh.shape[ROW_AXIS] > 1:
+        yield from composed_dist_mult_tiles(
+            source, mesh, tile_rows=tile_rows, panel_rows=panel_rows,
+            sources=sources, source_ids=source_ids,
+            adjacency_budget=adjacency_budget, block=block,
+            interpret=interpret, packed=packed)
+        return
     if interpret is None:
         interpret = _interpret_default()
     fill, n = _adjacency_source(source)
@@ -532,16 +693,17 @@ def tiled_dist_mult_tiles(
         # _largest_divisor_block), and the N dimension is the long one
         bn = _largest_divisor_block(pc, 2048)
         bk = _largest_divisor_block(pc, 512)
-    lo, hi = (0, n) if sources is None else sources
-    if not (0 <= lo < hi <= n):
-        raise ValueError(f"sources {sources!r} outside [0, {n})")
-    tile_rows = max(1, min(tile_rows, hi - lo))
+    ids_all, base = _resolve_source_ids(n, sources, source_ids)
+    tile_rows = max(1, min(tile_rows, len(ids_all)))
 
     from ... import obs
 
-    stream = pc * pc * 4 > adjacency_budget
+    adtype = np.uint8 if packed else np.float32
+    abytes = np.dtype(adtype).itemsize
+    stream = pc * pc * abytes > adjacency_budget
     if panel_rows is None:
-        panel_rows = min(pc, max(_TILE, adjacency_budget // (8 * pc * 4)))
+        panel_rows = min(pc, max(_TILE,
+                                 adjacency_budget // (8 * pc * abytes)))
     # panels must tile the padded width exactly (uniform K-slabs, one jit):
     # round down to the largest 128-multiple that divides pc
     panel_rows = max(_TILE, min(pc, panel_rows) - (min(pc, panel_rows) % _TILE))
@@ -550,15 +712,16 @@ def tiled_dist_mult_tiles(
     # the panel product's K dimension is panel_rows, not pc — its K block
     # must divide THAT (panel_rows | pc, so this also divides pc)
     bk_panel = _largest_divisor_block(panel_rows, bk)
-    panel_buf = np.zeros((panel_rows, pc), np.float32)   # the pinned pump
+    panel_buf = np.zeros((panel_rows, pc), adtype)   # the pinned pump
     adj_dev = None
     if not stream:
         # whole padded adjacency fits: build it panel-wise into one device
         # upload, then every level is a single fused frontier_step
-        adj_host = np.zeros((pc, pc), np.float32)
+        adj_host = np.zeros((pc, pc), adtype)
         for k0 in range(0, n, panel_rows):
             k1 = min(n, k0 + panel_rows)
             adj_host[k0:k1] = fill(k0, k1, panel_buf)[:k1 - k0]
+            _record_panel(panel_buf.nbytes, adtype, h2d=False)
         obs.record_h2d(adj_host.nbytes, "adjacency")
         adj_dev = jnp.asarray(adj_host)
         del adj_host
@@ -566,35 +729,28 @@ def tiled_dist_mult_tiles(
     # (panels fully inside the column padding are all-zero: skipped)
     panels = [(k0, min(n, k0 + panel_rows))
               for k0 in range(0, pc, panel_rows) if k0 < n]
+    max_level = min(n, 32766) if packed else n
 
-    for r0 in range(lo, hi, tile_rows):
-        r1 = min(hi, r0 + tile_rows)
-        t = r1 - r0
-        if t <= 512:
-            tp = t + ((-t) % 8)       # f32 sublane tile; one row block
-            bm = tp
-        else:
-            # big tiles pad to the 128 lane tile (<= 127 phantom rows) so
-            # the row block never degrades below 128 — interpret mode pays
-            # per grid program (see _largest_divisor_block)
-            tp = _pad128(t)
-            bm = _largest_divisor_block(tp, 512)
+    for c0 in range(0, len(ids_all), tile_rows):
+        ids = ids_all[c0:c0 + tile_rows]
+        t = len(ids)
+        r0 = c0 if base is None else base + c0
+        r1 = r0 + t
+        tp, bm = _tile_shape(t)
         with obs.span("tiled.tile", cat="tiled", r0=r0, r1=r1,
-                      streamed=stream) as sp:
-            eye = np.zeros((tp, pc), np.float32)
-            eye[np.arange(t), np.arange(r0, r1)] = 1.0
-            seed = np.where(eye > 0, np.float32(0), np.float32(np.inf))
+                      streamed=stream, packed=packed) as sp:
+            eye, seed = _seed_tile(ids, tp, pc, packed)
             obs.record_h2d(eye.nbytes + seed.nbytes, "tile_seed")
             dist = jnp.asarray(seed)
             mult = jnp.asarray(eye)
             frontier = mult
-            level_fused = _tile_level_fn(bm, bn, bk, interpret)
-            level_masked = _mask_update_fn()
+            level_fused = _tile_level_fn(bm, bn, bk, interpret, packed)
+            level_masked = _mask_update_fn(packed)
             panel_acc = _panel_accumulate_fn(bm, bn, bk_panel, interpret)
 
             pumped = 0
             level = 1
-            while level <= n:
+            while level <= max_level:
                 lv = jnp.int32(level)
                 if stream:
                     x = jnp.zeros((tp, pc), jnp.float32)
@@ -606,7 +762,7 @@ def tiled_dist_mult_tiles(
                         # product is still in flight — only a host-side
                         # copy actually pins this panel's bytes
                         panel = jnp.asarray(fill(k0, k1, panel_buf).copy())
-                        obs.record_h2d(panel.nbytes, "panel")
+                        _record_panel(panel.nbytes, adtype)
                         x = panel_acc(x, frontier, panel, jnp.int32(k0))
                         pumped += 1
                     dist, mult, frontier, more = level_masked(x, dist, mult,
@@ -636,14 +792,23 @@ def tiled_dist_mult(source, tile_rows: int = 512,
     from .paths import _warn_if_inexact
 
     n = _router_count(source)
+    packed = bool(kw.get("packed"))
     if out is None:
-        out = (np.empty((n, n), np.float32), np.empty((n, n), np.float32))
+        if packed:
+            out = (np.empty((n, n), np.int16), np.empty((n, n), np.uint32))
+        else:
+            out = (np.empty((n, n), np.float32),
+                   np.empty((n, n), np.float32))
     dist, mult = out
     for r0, r1, d, m in tiled_dist_mult_tiles(source, tile_rows, panel_rows,
                                               **kw):
         dist[r0:r1] = d
         mult[r0:r1] = m
-    _warn_if_inexact(mult, use_kernel=True)
+    if not packed:
+        # packed counts saturate (clamp + warn in the pump) instead of
+        # losing f32 integer precision, so the 2**24 exactness check is an
+        # f32-engine concern only
+        _warn_if_inexact(mult, use_kernel=True)
     return dist, mult
 
 
@@ -657,7 +822,7 @@ def _peak_rss_mb() -> float:
 def tiled_summary(source, tile_rows: int = 512,
                   panel_rows: Optional[int] = None,
                   sources: Optional[Tuple[int, int]] = None,
-                  **kw) -> Dict[str, object]:
+                  on_tile=None, **kw) -> Dict[str, object]:
     """Streaming aggregate of the tiled engine — no N x N buffer anywhere.
 
     Folds each (tile, n) dist/mult tile into diameter, reached-pair count,
@@ -668,12 +833,17 @@ def tiled_summary(source, tile_rows: int = 512,
     the extreme-scale claim, sampled through the structured `repro.obs`
     meters (``tiled.peak_rss_mb`` gauge, ``tiled.tiles`` counter) instead
     of ad-hoc prints.
+
+    ``on_tile(r0, r1, dist, mult)``, when given, sees every tile before it
+    is folded — callers spot-check rows without paying a second pass.
     """
     import time
 
     from ... import obs
+    from ...kernels.semiring import DIST_UNREACHED, MULT_SAT
 
     n = _router_count(source)
+    packed = bool(kw.get("packed"))
     t0 = time.perf_counter()
     diam = 0
     pairs = 0
@@ -688,7 +858,14 @@ def tiled_summary(source, tile_rows: int = 512,
         for r0, r1, d, m in tiled_dist_mult_tiles(source, tile_rows,
                                                   panel_rows,
                                                   sources=sources, **kw):
-            off = np.isfinite(d) & (d > 0)
+            if on_tile is not None:
+                on_tile(r0, r1, d, m)
+            # packed tiles carry the int16 DIST_UNREACHED sentinel instead
+            # of +inf (int16 is always "finite")
+            if packed:
+                off = (d > 0) & (d != DIST_UNREACHED)
+            else:
+                off = np.isfinite(d) & (d > 0)
             if off.any():
                 diam = max(diam, int(d[off].max()))
                 pairs += int(off.sum())
@@ -717,7 +894,260 @@ def tiled_summary(source, tile_rows: int = 512,
         "elapsed_s": round(time.perf_counter() - t0, 2),
         "peak_rss_mb": round(_peak_rss_mb(), 1),
         "single_buffer_mb": round(6 * pc * pc * 4 / 2**20, 1),
+        "packed": packed,
+        "saturated": bool(packed and mult_max >= MULT_SAT),
     }
+
+
+# -- composed engine: sharding x streaming -------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dist_mult_composed_fn(mesh, bm: int, bn: int, bk_panel: int,
+                           interpret: bool, packed: bool):
+    """The composed level loop: row-sharded state x ring-rotated sharded
+    adjacency panels, ONE jitted `lax.while_loop` with the psum convergence
+    flag. Each shard holds its (kp, p) adjacency rows resident; per level a
+    `fori_loop` ring (`lax.ppermute`) walks every K-slab past every shard,
+    so the full product is accumulated without a dense or replicated
+    adjacency ever existing."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ...kernels.semiring import (COUNTING, DIST_UNREACHED, MULT_SAT,
+                                     semiring_matmul_pallas)
+
+    num_shards = mesh.shape[ROW_AXIS]
+    fwd = [(i, (i - 1) % num_shards) for i in range(num_shards)]
+
+    def local(adj_panel, eye, dist0):
+        # adj_panel: this shard's (kp, p) adjacency rows (kp = p / P);
+        # eye / dist0: this shard's (rows, p) slice of the source tile
+        kp, p = adj_panel.shape
+        rows = eye.shape[0]
+        me = jax.lax.axis_index(ROW_AXIS)
+        cap = jnp.int32(min(p, 32766) if packed else p)
+
+        def level_product(frontier):
+            # ring step s: this shard holds the panel that started on shard
+            # (me + s) % P — multiply the matching frontier K-slab against
+            # it, then pass the panel one shard down the ring. After P
+            # steps every K-slab has been contracted exactly once and the
+            # panels are back home. The ring reorders the K partial sums
+            # per shard, which cannot change a bit: the partials are
+            # integer-valued f32 (exact below 2**24).
+            def ring(s, carry):
+                acc, panel = carry
+                owner = (me + s) % num_shards
+                f_slab = jax.lax.dynamic_slice_in_dim(
+                    frontier, owner * kp, kp, axis=1)
+                (term,) = semiring_matmul_pallas(
+                    COUNTING, (f_slab,), (panel,), bm=bm, bn=bn,
+                    bk=bk_panel, interpret=interpret,
+                    out_dtype=jnp.float32)
+                acc = acc + term
+                panel = jax.lax.ppermute(panel, ROW_AXIS, fwd)
+                return acc, panel
+
+            acc, _ = jax.lax.fori_loop(
+                0, num_shards, ring,
+                (jnp.zeros((rows, p), jnp.float32), adj_panel))
+            return acc
+
+        if packed:
+            def update(x, dist, mult, level):
+                new = (x > 0) & (dist == DIST_UNREACHED)
+                xs = jnp.where(new, jnp.minimum(x, float(MULT_SAT)),
+                               0.0).astype(jnp.uint32)
+                dist = jnp.where(new, level.astype(jnp.int16), dist)
+                return dist, mult + xs, xs, new
+        else:
+            def update(x, dist, mult, level):
+                new = (x > 0) & ~jnp.isfinite(dist)
+                xf = jnp.where(new, x, 0.0)
+                dist = jnp.where(new, level.astype(jnp.float32), dist)
+                return dist, mult + xf, xf, new
+
+        def cond(state):
+            level, _, _, _, more, _ = state
+            return more & (level <= cap)
+
+        def body(state):
+            level, dist, mult, frontier, _, sat = state
+            x = level_product(frontier)
+            dist, mult, frontier, new = update(x, dist, mult, level)
+            if packed:
+                sat = sat | jnp.any(frontier == MULT_SAT)
+            # the ONE per-level collective beyond the ring: did any shard
+            # reach a new pair?
+            more = jax.lax.psum(new.any().astype(jnp.int32), ROW_AXIS) > 0
+            return level + 1, dist, mult, frontier, more, sat
+
+        _, dist, mult, _, _, sat = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(1), dist0, eye, eye, jnp.bool_(True),
+             jnp.bool_(False)))
+        sat = jax.lax.psum(sat.astype(jnp.int32), ROW_AXIS) > 0
+        return dist, mult, sat
+
+    row = P(ROW_AXIS, None)
+    fn = shard_map(local, mesh=mesh, in_specs=(row, row, row),
+                   out_specs=(row, row, P()), check_rep=False)
+    return jax.jit(fn)
+
+
+def _build_sharded_adjacency(fill, n: int, p: int, mesh, panel_rows: int,
+                             adtype):
+    """Assemble the row-sharded (p, p) adjacency: each shard's (kp, p) row
+    block is built from CSR through the reused staging buffer and placed on
+    its device, then the blocks join into one sharded jax.Array. The dense
+    p x p matrix never exists on the host (peak host transient: one shard
+    block) and no device ever holds more than its own rows."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from ... import obs
+
+    num_shards = mesh.shape[ROW_AXIS]
+    kp = p // num_shards
+    devices = list(mesh.devices.flat)
+    panel_buf = np.zeros((panel_rows, p), adtype)     # the pinned pump
+    shards = []
+    for d, dev in enumerate(devices):
+        # a fresh host block per shard: device_put on host-backed devices
+        # can alias the numpy buffer, so the block must never be reused
+        block_host = np.zeros((kp, p), adtype)
+        g0 = d * kp
+        for k0 in range(g0, min(n, g0 + kp), panel_rows):
+            k1 = min(n, g0 + kp, k0 + panel_rows)
+            block_host[k0 - g0:k1 - g0] = fill(k0, k1, panel_buf)[:k1 - k0]
+            _record_panel(panel_buf.nbytes, adtype, h2d=False)
+        obs.record_h2d(block_host.nbytes, "adjacency_shard")
+        shards.append(jax.device_put(block_host, dev))
+        del block_host
+    obs.gauge("composed.shard_panel_mb").set(round(kp * p * np.dtype(
+        adtype).itemsize / 2**20, 1))
+    sharding = NamedSharding(mesh, P(ROW_AXIS, None))
+    return jax.make_array_from_single_device_arrays((p, p), sharding, shards)
+
+
+def composed_dist_mult_tiles(
+        source, mesh, tile_rows: int = 512,
+        panel_rows: Optional[int] = None,
+        sources: Optional[Tuple[int, int]] = None,
+        source_ids=None,
+        adjacency_budget: int = _ADJ_BUDGET,
+        block: Optional[int] = None, interpret: Optional[bool] = None,
+        packed: bool = False,
+) -> Iterator[Tuple[int, int, np.ndarray, np.ndarray]]:
+    """Sharding x streaming composed dist+mult, one source tile at a time.
+
+    The extreme-scale pump: the adjacency lives row-sharded on the mesh —
+    shard d owns rows [d*N/P, (d+1)*N/P), built from CSR through the reused
+    staging buffer, so neither the dense N x N matrix nor a replicated
+    per-device copy ever exists — and source tiles stream through the mesh
+    with each shard owning its (tile/P, N) dist/mult rows. The level loop
+    is ONE jitted `shard_map` `lax.while_loop` with the psum convergence
+    flag; a `lax.ppermute` ring rotates the adjacency panels inside it (see
+    :func:`_dist_mult_composed_fn`). Yields the same
+    ``(r0, r1, dist_tile, mult_tile)`` contract as
+    :func:`tiled_dist_mult_tiles`, bit-equal to it and to the single-device
+    wavefront where values fit.
+
+    ``adjacency_budget`` bounds the PER-DEVICE resident panel
+    (N^2/P x cell bytes). Past it, there is no in-loop streaming fallback —
+    the single `while_loop` admits no host callbacks — so the call raises
+    with the knobs that fit: more shards, ``packed=True`` (uint8 panels,
+    4x), a larger budget, or the single-device streaming engine
+    (``mesh=None``).
+    """
+    num_shards = mesh.shape[ROW_AXIS] if mesh is not None else 1
+    if num_shards <= 1:
+        yield from tiled_dist_mult_tiles(
+            source, tile_rows=tile_rows, panel_rows=panel_rows,
+            sources=sources, source_ids=source_ids,
+            adjacency_budget=adjacency_budget, block=block,
+            interpret=interpret, packed=packed)
+        return
+    if interpret is None:
+        interpret = _interpret_default()
+    fill, n = _adjacency_source(source)
+    p = _pad128(n)
+    p += (-p) % (num_shards * _TILE)
+    kp = p // num_shards
+    adtype = np.uint8 if packed else np.float32
+    abytes = np.dtype(adtype).itemsize
+    if kp * p * abytes > adjacency_budget:
+        need = kp * p * abytes
+        raise ValueError(
+            f"composed engine: per-device adjacency panel needs {need} "
+            f"bytes ({need / 2**20:.0f} MiB) > adjacency_budget "
+            f"{adjacency_budget} — use more shards, packed=True (uint8 "
+            f"panels), a larger budget, or the single-device streaming "
+            f"engine (mesh=None)")
+    if block is not None and p % block == 0 and kp % block == 0:
+        bn = block
+        bk_panel = block
+    else:
+        bn = _largest_divisor_block(p, 2048)
+        bk_panel = _largest_divisor_block(kp, 512)
+    if panel_rows is None:
+        panel_rows = min(kp, max(_TILE, adjacency_budget // (8 * p * abytes)))
+    panel_rows = max(_TILE,
+                     min(kp, panel_rows) - (min(kp, panel_rows) % _TILE))
+    while kp % panel_rows:
+        panel_rows -= _TILE
+
+    from ... import obs
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    ids_all, base = _resolve_source_ids(n, sources, source_ids)
+    tile_rows = max(1, min(tile_rows, len(ids_all)))
+    row_sharding = NamedSharding(mesh, P(ROW_AXIS, None))
+
+    with obs.span("composed.build", cat="composed", routers=n, padded=p,
+                  shards=num_shards, packed=packed):
+        adj = _build_sharded_adjacency(fill, n, p, mesh, panel_rows, adtype)
+
+    for c0 in range(0, len(ids_all), tile_rows):
+        ids = ids_all[c0:c0 + tile_rows]
+        t = len(ids)
+        r0 = c0 if base is None else base + c0
+        r1 = r0 + t
+        # the tile splits row-wise over the mesh: every shard needs whole
+        # 8-row sublane tiles, and the per-shard row block must divide the
+        # local row count
+        unit = 8 * num_shards
+        if t <= 512 * num_shards:
+            tp = t + ((-t) % unit)
+            bm = tp // num_shards
+        else:
+            tp = t + ((-t) % (num_shards * _TILE))
+            bm = _largest_divisor_block(tp // num_shards, 512)
+        with obs.span("composed.tile", cat="composed", r0=r0, r1=r1,
+                      packed=packed) as sp:
+            eye, seed = _seed_tile(ids, tp, p, packed)
+            obs.record_h2d(eye.nbytes + seed.nbytes, "tile_seed")
+            eye_dev = jax.device_put(eye, row_sharding)
+            seed_dev = jax.device_put(seed, row_sharding)
+            fn = _dist_mult_composed_fn(mesh, bm, bn, bk_panel, interpret,
+                                        packed)
+            dist, mult, sat = fn(adj, eye_dev, seed_dev)
+            sp.set(saturated=bool(sat))
+            if bool(sat):
+                import warnings
+
+                warnings.warn(
+                    "composed engine: a multiplicity reached MULT_SAT "
+                    "(2**24) and was clamped — saturated counts are lower "
+                    "bounds", RuntimeWarning, stacklevel=2)
+            try:
+                obs.gauge("composed.device_peak_mb").set(
+                    round(obs.device_memory_mb(), 1))
+            except Exception:  # noqa: BLE001 - CPU backends lack the stat
+                pass
+            yield (r0, r1, np.asarray(dist)[:t, :n],
+                   np.asarray(mult)[:t, :n])
 
 
 # -- host oracle ---------------------------------------------------------------
@@ -777,6 +1207,17 @@ def main(argv=None) -> int:
                          "(tiles are independent; default: all)")
     ap.add_argument("--adjacency-budget", type=int, default=_ADJ_BUDGET,
                     help="device bytes before adjacency panels stream")
+    ap.add_argument("--packed", action="store_true",
+                    help="packed cells: uint8 panels, int16 dist, uint32 "
+                         "mult saturating at 2**24 (4x less streamed/"
+                         "resident memory; bit-exact where values fit)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="row-shard over this many devices (composed "
+                         "engine); default: single-device streaming")
+    ap.add_argument("--block", type=int, default=None,
+                    help="explicit kernel block edge (must divide the "
+                         "padded column/K extents); larger blocks cut the "
+                         "per-block dispatch overhead at big sizes")
     ap.add_argument("--check", type=int, default=2,
                     help="spot-check this many sources vs the CSR oracle")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
@@ -795,27 +1236,47 @@ def main(argv=None) -> int:
     else:
         g = topo.by_servers(args.family, args.routers)
     srcs = (0, min(args.sources, g.n)) if args.sources else None
+    mesh = None
+    if args.shards and args.shards > 1:
+        mesh = device_mesh(args.shards)
 
-    if args.check:
-        lo, hi = srcs if srcs else (0, g.n)
-        probe = (lo, min(hi, lo + args.check))
-        for r0, _, d, m in tiled_dist_mult_tiles(
-                g, tile_rows=probe[1] - probe[0], sources=probe,
-                panel_rows=args.panel_rows,
-                adjacency_budget=args.adjacency_budget):
-            for i in range(d.shape[0]):
-                od, osig = bfs_dist_sigma(g, r0 + i)
-                np.testing.assert_array_equal(d[i], od.astype(np.float32))
-                np.testing.assert_array_equal(m[i], osig.astype(np.float32))
-        obs.log("distributed.check", status="oracle spot-check OK",
-                sources=probe[1] - probe[0])
+    # the oracle spot-check rides the summary stream itself (on_tile sees
+    # every tile before it is folded) — one pass, not two
+    check_lo = srcs[0] if srcs else 0
+    check_hi = min(check_lo + args.check, g.n) if args.check else check_lo
+    checked = [0]
+
+    def spot_check(r0, r1, d, m):
+        from ...kernels.semiring import DIST_UNREACHED, MULT_SAT
+
+        for i in range(max(check_lo, r0), min(check_hi, r1)):
+            od, osig = bfs_dist_sigma(g, i)
+            if args.packed:
+                od = np.where(np.isfinite(od), od,
+                              DIST_UNREACHED).astype(np.int16)
+                osig = np.minimum(osig, MULT_SAT).astype(np.uint32)
+            else:
+                od = od.astype(np.float32)
+                osig = osig.astype(np.float32)
+            np.testing.assert_array_equal(d[i - r0], od)
+            np.testing.assert_array_equal(m[i - r0], osig)
+            checked[0] += 1
 
     summary = tiled_summary(g, tile_rows=args.tile_rows,
                             panel_rows=args.panel_rows, sources=srcs,
-                            adjacency_budget=args.adjacency_budget)
+                            adjacency_budget=args.adjacency_budget,
+                            packed=args.packed, mesh=mesh, block=args.block,
+                            on_tile=spot_check if args.check else None)
+    if args.check:
+        assert checked[0] == check_hi - check_lo, (checked[0], check_lo,
+                                                  check_hi)
+        obs.log("distributed.check", status="oracle spot-check OK",
+                sources=checked[0])
     summary["family"] = g.name
+    summary["shards"] = mesh.shape[ROW_AXIS] if mesh is not None else 1
     summary["adjacency_streamed"] = bool(
-        _pad128(g.n) ** 2 * 4 > args.adjacency_budget)
+        mesh is None and _pad128(g.n) ** 2 * (1 if args.packed else 4)
+        > args.adjacency_budget)
     print(json.dumps(summary, indent=1))
     if args.trace:
         obs.export(args.trace)

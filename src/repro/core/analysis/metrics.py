@@ -53,7 +53,8 @@ class AnalysisEngine:
                  n_sources: int = 64, use_kernel: bool = True,
                  interference_pairs: int = 64, seed: int = 0,
                  throughput_eps: float = 0.25, throughput_rounds: int = 64,
-                 throughput_demand: str = "auto", mesh="auto"):
+                 throughput_demand: str = "auto", mesh="auto",
+                 tile_rows=None, packed: bool = False):
         self.g = g
         self.dense_limit = dense_limit
         self.n_sources = n_sources
@@ -65,8 +66,16 @@ class AnalysisEngine:
         self.throughput_demand = throughput_demand
         #: "auto" = row-shard the wavefront over all visible devices when
         #: more than one is up (`distributed.default_mesh`); an explicit
-        #: Mesh pins the layout; None forces the single-device engine
+        #: Mesh pins the layout; None forces the single-device engine.
+        #: ``tile_rows`` streams source tiles out-of-core; with a mesh it
+        #: COMPOSES (sharded adjacency x streamed tiles). ``packed`` runs
+        #: the int16/uint32 packed-cell engine; results are unpacked to the
+        #: f32/inf convention before caching so every stage downstream is
+        #: dtype-agnostic. All combinations are policed by
+        #: `engine_select.resolve_engine`.
         self.mesh = mesh
+        self.tile_rows = tile_rows
+        self.packed = packed
         self._cache: Dict[str, object] = {}
 
     def _resolved_mesh(self):
@@ -92,12 +101,30 @@ class AnalysisEngine:
         """
         if "dist" not in self._cache:
             if self.exact and self.use_kernel:
-                from .distributed import sharded_dist_mult
+                from .engine_select import resolve_engine
 
-                # mesh=None degrades to the single-device wavefront engine
-                dist, mult = sharded_dist_mult(
-                    self.g.adjacency_dense(np.float32),
-                    mesh=self._resolved_mesh())
+                plan = resolve_engine(use_kernel=True,
+                                      mesh=self._resolved_mesh(),
+                                      tile_rows=self.tile_rows,
+                                      packed=self.packed)
+                if plan.engine in ("tiled", "composed") or plan.packed:
+                    from .paths import shortest_path_multiplicity
+
+                    dist, mult = shortest_path_multiplicity(
+                        self.g, use_kernel=True, mesh=plan.mesh,
+                        tile_rows=plan.tile_rows, packed=plan.packed)
+                    if plan.packed:
+                        from ...kernels.semiring import DIST_UNREACHED
+
+                        dist = np.where(dist == DIST_UNREACHED, np.inf,
+                                        dist).astype(np.float32)
+                        mult = mult.astype(np.float32)
+                else:
+                    from .distributed import sharded_dist_mult
+
+                    # mesh=None degrades to the single-device wavefront
+                    dist, mult = sharded_dist_mult(
+                        self.g.adjacency_dense(np.float32), mesh=plan.mesh)
                 self._cache["dist"], self._cache["mult"] = dist, mult
             elif self.exact:
                 self._cache["dist"] = apsp_dense(self.g, use_kernel=False)

@@ -80,7 +80,7 @@ def _count_product(use_kernel: bool):
 
 def shortest_path_multiplicity(
         g: Graph, dist: Optional[np.ndarray] = None, use_kernel: bool = True,
-        mesh=None, tile_rows: Optional[int] = None,
+        mesh=None, tile_rows: Optional[int] = None, packed: bool = False,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact (dist, multiplicity) matrices for all router pairs.
 
@@ -95,23 +95,41 @@ def shortest_path_multiplicity(
     :func:`tropical_count_relaxation`, the kernel-path oracle.
 
     Extreme-scale knobs (`analysis.distributed`, kernel path without
-    ``dist`` only): ``mesh`` row-shards the wavefront over a device mesh
-    (bit-equal); ``tile_rows`` streams source tiles out-of-core instead.
+    ``dist`` only, resolved by `engine_select.resolve_engine` — see its
+    matrix): ``mesh`` row-shards the wavefront over a device mesh
+    (bit-equal); ``tile_rows`` streams source tiles out-of-core; both
+    together compose (sharded adjacency x streamed tiles). ``packed=True``
+    shrinks every cell — uint8 adjacency, int16 dist, uint32 mult
+    saturating at 2**24 — and RETURNS (int16, uint32) matrices with the
+    DIST_UNREACHED sentinel instead of +inf.
 
     Every count the kernel path keeps is a sum of nonnegative terms equal
     to some sigma(i, j), so results are exact iff the largest multiplicity
-    fits f32's integer range; past that a RuntimeWarning is emitted.
+    fits f32's integer range; past that a RuntimeWarning is emitted (packed
+    counts clamp at MULT_SAT and warn instead — never wrap).
     """
-    if dist is None and use_kernel and tile_rows is not None:
-        from .distributed import tiled_dist_mult
+    if dist is None:
+        from .engine_select import resolve_engine
 
-        return tiled_dist_mult(g, tile_rows=tile_rows)
-    if dist is None and use_kernel:
-        from .distributed import sharded_dist_mult
+        plan = resolve_engine(use_kernel=use_kernel, mesh=mesh,
+                              tile_rows=tile_rows, packed=packed)
+        if plan.engine in ("tiled", "composed"):
+            from .distributed import tiled_dist_mult
 
-        # sharded/wavefront engines warn on f32-inexact counts themselves;
-        # mesh=None is exactly the single-device wavefront path
-        return sharded_dist_mult(g.adjacency_dense(np.float32), mesh=mesh)
+            return tiled_dist_mult(g, tile_rows=plan.tile_rows or 512,
+                                   mesh=plan.mesh, packed=plan.packed)
+        if plan.engine == "wavefront" and plan.packed:
+            from .wavefront import wavefront_dist_mult
+
+            return wavefront_dist_mult(g.adjacency_dense(np.float32),
+                                       packed=True)
+        if plan.engine in ("wavefront", "sharded"):
+            from .distributed import sharded_dist_mult
+
+            # sharded/wavefront engines warn on f32-inexact counts
+            # themselves; mesh=None is exactly the single-device wavefront
+            return sharded_dist_mult(g.adjacency_dense(np.float32),
+                                     mesh=plan.mesh)
     if dist is None:
         from .apsp import bfs_distances
 

@@ -79,16 +79,18 @@ def pad_block(n: int, block: Optional[int] = None,
     return p, block
 
 
-def pad_operand(x: np.ndarray, p: int, fill: float) -> np.ndarray:
-    """Pad the trailing two dims of ``x`` to (p, p) as f32 — the one
-    phantom-router padding helper every device-engine caller shares
-    (fills: adjacency/multiplicity 0, distance +inf)."""
-    x = np.asarray(x, np.float32)
+def pad_operand(x: np.ndarray, p: int, fill: float,
+                dtype=np.float32) -> np.ndarray:
+    """Pad the trailing two dims of ``x`` to (p, p) — the one phantom-router
+    padding helper every device-engine caller shares (fills:
+    adjacency/multiplicity 0, distance +inf — or DIST_UNREACHED for the
+    packed int16 cells, with ``dtype`` overriding the default f32)."""
+    x = np.asarray(x, dtype)
     n = x.shape[-1]
     if n == p:
         return x
     w = [(0, 0)] * (x.ndim - 2) + [(0, p - n)] * 2
-    return np.pad(x, w, constant_values=np.float32(fill))
+    return np.pad(x, w, constant_values=np.asarray(fill, dtype))
 
 
 def _fit_block(p: int, block: Optional[int], batched: bool = False) -> int:
@@ -108,8 +110,11 @@ def _fit_block(p: int, block: Optional[int], batched: bool = False) -> int:
 
 @functools.lru_cache(maxsize=None)
 def _dist_mult_fn(batched: bool, block: int, interpret: bool,
-                  telemetry: bool = False):
+                  telemetry: bool = False, packed: bool = False):
     from ... import kernels
+
+    if packed:
+        return _dist_mult_packed_fn(batched, block, interpret, telemetry)
 
     step = (kernels.semiring.frontier_step_batched_pallas if batched
             else kernels.semiring.frontier_step_pallas)
@@ -169,9 +174,79 @@ def _dist_mult_fn(batched: bool, block: int, interpret: bool,
     return jax.jit(run)
 
 
+@functools.lru_cache(maxsize=None)
+def _dist_mult_packed_fn(batched: bool, block: int, interpret: bool,
+                         telemetry: bool = False):
+    """Packed-cell twin of :func:`_dist_mult_fn`: int16 dist, saturating
+    uint32 mult, uint8 adjacency. Same single `lax.while_loop`; the extra
+    return is a bool saturation flag (any multiplicity clamped at MULT_SAT).
+    A separate cached factory so the f32 engine's jaxpr stays byte-identical
+    to its pre-packed form (asserted in tests/test_wavefront.py)."""
+    from ... import kernels
+    from ...kernels.semiring import DIST_UNREACHED, MULT_DTYPE, MULT_SAT
+
+    step = (kernels.semiring.frontier_step_packed_batched_pallas if batched
+            else kernels.semiring.frontier_step_packed_pallas)
+
+    def run(adj: jnp.ndarray):
+        p = adj.shape[-1]
+        eye = jnp.broadcast_to(jnp.eye(p, dtype=MULT_DTYPE), adj.shape)
+        dist0 = jnp.where(eye > 0, 0, DIST_UNREACHED).astype(jnp.int16)
+        # the int16 cell caps representable levels; every family here has
+        # diameter << 32767, so the cap is a safety bound, not a limit hit
+        cap = jnp.int32(min(p, DIST_UNREACHED - 1))
+        sat0 = jnp.bool_(False)
+
+        if not telemetry:
+            def cond(state):
+                level, _, _, _, more, _ = state
+                return more & (level <= cap)
+
+            def body(state):
+                level, dist, mult, frontier, _, sat = state
+                x = step(frontier, adj, dist, bm=block, bn=block, bk=block,
+                         interpret=interpret)
+                new = x > 0
+                dist = jnp.where(new, level.astype(jnp.int16), dist)
+                mult = mult + x
+                sat = sat | jnp.any(x == MULT_SAT)
+                return level + 1, dist, mult, x, new.any(), sat
+
+            _, dist, mult, _, _, sat = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(1), dist0, eye, eye, jnp.bool_(True), sat0))
+            return dist, mult, sat
+
+        sizes0 = jnp.zeros((p + 1, adj.shape[0]) if batched else (p + 1,),
+                           jnp.int32)
+
+        def cond(state):
+            level, _, _, _, more, _, _ = state
+            return more & (level <= cap)
+
+        def body(state):
+            level, dist, mult, frontier, _, sat, sizes = state
+            x = step(frontier, adj, dist, bm=block, bn=block, bk=block,
+                     interpret=interpret)
+            new = x > 0
+            dist = jnp.where(new, level.astype(jnp.int16), dist)
+            mult = mult + x
+            sat = sat | jnp.any(x == MULT_SAT)
+            cnt = jnp.sum(new, axis=(-2, -1), dtype=jnp.int32)
+            sizes = sizes.at[level].set(cnt)
+            return level + 1, dist, mult, x, new.any(), sat, sizes
+
+        level, dist, mult, _, _, sat, sizes = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(1), dist0, eye, eye, jnp.bool_(True), sat0, sizes0))
+        return dist, mult, sat, (level - 1, sizes)
+
+    return jax.jit(run)
+
+
 def dist_mult_device(adj: jnp.ndarray, block: Optional[int] = None,
                      interpret: Optional[bool] = None,
-                     telemetry: bool = False):
+                     telemetry: bool = False, packed: bool = False):
     """Hop distances + shortest-path multiplicities, fully on device.
 
     ``adj`` is a (p, p) or stacked (B, p, p) {0,1} float adjacency whose
@@ -186,12 +261,20 @@ def dist_mult_device(adj: jnp.ndarray, block: Optional[int] = None,
     an int32 (p+1,) (or (p+1, B) stacked) array of newly-reached pair
     counts per level — device outputs carried through the same single
     `while`, no callbacks (see :func:`telemetry_attrs`).
+
+    ``packed=True`` runs the narrow-cell engine: ``adj`` should be a uint8
+    {0,1} adjacency, dist comes back int16 (DIST_UNREACHED = unreached),
+    mult uint32 saturating at MULT_SAT, and a bool ``sat`` flag is appended
+    to the return tuple — ``(dist, mult, sat)`` or
+    ``(dist, mult, sat, aux)`` with telemetry. Bit-equal (as integers) to
+    the f32 engine while diameters and counts fit.
     """
     if interpret is None:
         interpret = _interpret_default()
     p = adj.shape[-1]
     block = _fit_block(p, block, batched=adj.ndim == 3)
-    return _dist_mult_fn(adj.ndim == 3, block, interpret, telemetry)(adj)
+    return _dist_mult_fn(adj.ndim == 3, block, interpret, telemetry,
+                         packed)(adj)
 
 
 def telemetry_attrs(aux) -> Dict[str, object]:
@@ -223,7 +306,8 @@ def telemetry_attrs(aux) -> Dict[str, object]:
     return attrs
 
 
-def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None
+def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None,
+                        packed: bool = False
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """Host convenience wrapper: pad -> device engine -> sliced np arrays.
 
@@ -231,20 +315,38 @@ def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None
     range — the engine's counts are f32 on device. Under an enabled
     `repro.obs` tracer the call is spanned and the device telemetry
     (levels, frontier sizes) lands in the span's attributes.
+
+    ``packed=True`` runs the narrow-cell engine and returns
+    ``(dist int16, mult uint32)`` — DIST_UNREACHED for unreached pairs
+    (see ``kernels.semiring.unpack_dist``), counts saturating at MULT_SAT
+    with a RuntimeWarning when any cell clamps. Adjacency uploads as uint8:
+    a quarter of the f32 bytes.
     """
     from .paths import _warn_if_inexact
 
-    adj = np.asarray(adj, np.float32)
-    n = adj.shape[-1]
-    p, block = pad_block(n, block, batched=adj.ndim == 3)
+    n = np.asarray(adj).shape[-1]
+    batched = np.asarray(adj).ndim == 3
+    p, block = pad_block(n, block, batched=batched)
     tel = obs.enabled()
     with obs.span("wavefront.dist_mult", routers=n, padded=p, block=block,
-                  batched=adj.ndim == 3) as sp:
-        padded = pad_operand(adj, p, 0.0)
+                  batched=batched, packed=packed) as sp:
+        dtype = np.uint8 if packed else np.float32
+        padded = pad_operand(adj, p, 0, dtype=dtype)
         obs.record_h2d(padded.nbytes, "adjacency")
         out = dist_mult_device(jnp.asarray(padded), block=block,
-                               telemetry=tel)
-        if tel:
+                               telemetry=tel, packed=packed)
+        if packed:
+            dist, mult, sat = out[0], out[1], out[2]
+            if tel:
+                sp.set(**telemetry_attrs(out[3]))
+            if bool(sat):
+                import warnings
+
+                warnings.warn(
+                    "packed wavefront: a shortest-path multiplicity reached "
+                    "MULT_SAT (2**24) and was clamped — saturated counts are "
+                    "lower bounds, not exact", RuntimeWarning, stacklevel=2)
+        elif tel:
             dist, mult, aux = out
             sp.set(**telemetry_attrs(aux))
         else:
@@ -252,7 +354,8 @@ def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None
         sl = (Ellipsis, slice(None, n), slice(None, n))
         mult = np.asarray(mult)[sl]
         dist = np.asarray(dist)[sl]
-    _warn_if_inexact(mult, use_kernel=True)
+    if not packed:
+        _warn_if_inexact(mult, use_kernel=True)
     return dist, mult
 
 

@@ -219,6 +219,10 @@ _PRIMES = [
     5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73,
     79, 83, 89, 97, 101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151,
     157, 163, 167, 173, 179, 181, 191, 193, 197, 199, 211, 223, 227, 229,
+    # the 100k-router regime: PolarFly PF(q) = q^2 + q + 1 needs q ~ 317,
+    # SlimFly MMS needs q ~ 229 — keep the ladder going past both
+    233, 239, 241, 251, 257, 263, 269, 271, 277, 281, 283, 293, 307, 311,
+    313, 317, 331, 337, 347, 349, 353, 359, 367, 373, 379, 383, 389, 397,
 ]
 
 _PRIMES_1MOD4 = [p for p in _PRIMES if p % 4 == 1]

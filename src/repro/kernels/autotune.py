@@ -81,8 +81,15 @@ def _read_json(path: pathlib.Path) -> Dict:
         return {}
 
 
-def shape_key(m: int, n: int, k: int) -> str:
-    """Bucket a problem shape: each dim rounds up to a power of two >= 128."""
+def shape_key(m: int, n: int, k: int, dtype: Optional[str] = None) -> str:
+    """Bucket a problem shape: each dim rounds up to a power of two >= 128.
+
+    A non-default ``dtype`` tag (e.g. ``"packed"`` for the int16/uint32
+    narrow-cell kernels) is folded into the key as a ``:dtype`` suffix, so
+    narrow kernels get their own tuned block shapes — their VMEM working set
+    per block is smaller, which shifts the optimum. ``None``/``"f32"`` keep
+    the legacy un-suffixed key, so shipped tables stay valid.
+    """
 
     def bucket(x: int) -> int:
         b = 128
@@ -90,7 +97,10 @@ def shape_key(m: int, n: int, k: int) -> str:
             b *= 2
         return b
 
-    return f"{bucket(m)}x{bucket(n)}x{bucket(k)}"
+    key = f"{bucket(m)}x{bucket(n)}x{bucket(k)}"
+    if dtype and dtype != "f32":
+        key += f":{dtype}"
+    return key
 
 
 _TABLE_CACHE: Optional[Dict] = None
@@ -144,24 +154,28 @@ def _note_decision(op: str, key: str, cfg: Dict[str, int],
                 tuned_entry=dict(tuned) if tuned else None)
 
 
-def resolve(op: str, m: int, n: int, k: int, **overrides) -> Dict[str, int]:
+def resolve(op: str, m: int, n: int, k: int, dtype: Optional[str] = None,
+            **overrides) -> Dict[str, int]:
     """Final config for one op call: overrides > tuned table > op default.
 
     Only keys the op's default config carries are returned, so VPU-only
     knobs (``sub_k``) never leak into MXU-path calls. Block shapes are
     clamped to the bucketed problem size (a 512-wide tile is useless on a
-    256-wide padded matrix). Under an enabled `repro.obs` tracer the
-    decision (winning entry + per-knob source) is emitted as an
-    ``autotune.resolve`` instant event, once per (op, shape bucket).
+    256-wide padded matrix). ``dtype`` keys the lookup (see
+    :func:`shape_key`): a ``"packed"`` entry never collides with the f32
+    entry for the same shape bucket, and a packed lookup falls back to the
+    op default — not the f32 tuned entry — when untuned. Under an enabled
+    `repro.obs` tracer the decision (winning entry + per-knob source) is
+    emitted as an ``autotune.resolve`` instant event, once per (op, key).
     """
-    key = shape_key(m, n, k)
+    key = shape_key(m, n, k, dtype)
     cfg = dict(DEFAULTS[op])
     tuned = load_table().get(op, {}).get(key)
     if tuned:
         cfg.update({kk: vv for kk, vv in tuned.items() if kk in cfg})
     cfg.update({kk: vv for kk, vv in overrides.items()
                 if kk in cfg and vv is not None})
-    bucket = [int(s) for s in key.split("x")]
+    bucket = [int(s) for s in key.split(":")[0].split("x")]
     for dim, limit in zip(("bm", "bn", "bk"), bucket):
         cfg[dim] = min(cfg[dim], limit)
     if "sub_k" in cfg:
@@ -183,34 +197,57 @@ def _bench_once(fn, *args) -> float:
 
 def autotune(op: str, size: int, batch: int = 0,
              candidates: Optional[Iterable[Dict[str, int]]] = None,
-             persist: bool = True) -> Dict[str, int]:
+             persist: bool = True,
+             dtype: Optional[str] = None) -> Dict[str, int]:
     """Time candidate configs for ``op`` at a square (size, size) problem
-    (optionally stacked ``batch`` deep) and persist the winner."""
+    (optionally stacked ``batch`` deep) and persist the winner.
+
+    ``dtype="packed"`` tunes the narrow-cell (int16 dist / uint32 mult /
+    uint8 adjacency) variant of the frontier-step ops under its own
+    ``:packed`` table key."""
     import jax.numpy as jnp
     import numpy as np
 
     from . import ops
+    from .semiring import DIST_UNREACHED
 
     rng = np.random.default_rng(0)
     shape = (batch, size, size) if batch else (size, size)
-    a = jnp.asarray((rng.random(shape) < 0.05).astype(np.float32))
+    mask = rng.random(shape) < 0.05
+    a = jnp.asarray(mask.astype(np.float32))
     d = jnp.asarray(np.where(np.eye(size, dtype=bool), 0.0,
                              np.inf).astype(np.float32))
     if batch:
         d = jnp.broadcast_to(d, shape)
 
-    runners = {
-        "minplus": lambda cfg: ops.minplus_matmul(a, a, **cfg),
-        "minplus_count": lambda cfg: ops.minplus_count_matmul(d, a, d, a,
-                                                              **cfg),
-        "count": lambda cfg: ops.count_matmul(a, a, **cfg),
-        "boolean": lambda cfg: ops.reachability_step(a, a, **cfg),
-        "frontier_step": lambda cfg: ops.frontier_step(a, a, d, **cfg),
-        "batched_minplus": lambda cfg: ops.batched_minplus_matmul(a, a, **cfg),
-        "batched_count": lambda cfg: ops.batched_count_matmul(a, a, **cfg),
-        "batched_frontier_step":
-            lambda cfg: ops.batched_frontier_step(a, a, d, **cfg),
-    }
+    if dtype == "packed":
+        if op not in ("frontier_step", "batched_frontier_step"):
+            raise ValueError(f"dtype='packed' tunes the frontier-step ops, "
+                             f"not {op!r}")
+        fq = jnp.asarray(mask.astype(np.uint32))
+        aq = jnp.asarray(mask.astype(np.uint8))
+        dq = jnp.where(d == jnp.inf, DIST_UNREACHED, d).astype(jnp.int16)
+        runners = {
+            "frontier_step":
+                lambda cfg: ops.frontier_step_packed(fq, aq, dq, **cfg),
+            "batched_frontier_step":
+                lambda cfg: ops.batched_frontier_step_packed(fq, aq, dq,
+                                                             **cfg),
+        }
+    else:
+        runners = {
+            "minplus": lambda cfg: ops.minplus_matmul(a, a, **cfg),
+            "minplus_count": lambda cfg: ops.minplus_count_matmul(d, a, d, a,
+                                                                  **cfg),
+            "count": lambda cfg: ops.count_matmul(a, a, **cfg),
+            "boolean": lambda cfg: ops.reachability_step(a, a, **cfg),
+            "frontier_step": lambda cfg: ops.frontier_step(a, a, d, **cfg),
+            "batched_minplus":
+                lambda cfg: ops.batched_minplus_matmul(a, a, **cfg),
+            "batched_count": lambda cfg: ops.batched_count_matmul(a, a, **cfg),
+            "batched_frontier_step":
+                lambda cfg: ops.batched_frontier_step(a, a, d, **cfg),
+        }
     if op not in runners:
         raise ValueError(f"unknown autotune op {op!r}")
     cands = list(candidates if candidates is not None
@@ -228,7 +265,7 @@ def autotune(op: str, size: int, batch: int = 0,
             best_cfg, best_t = cfg, dt
     if best_cfg is None:
         raise RuntimeError(f"no candidate config ran for {op} at {size}")
-    key = shape_key(*(shape[-2], shape[-1], shape[-1]))
+    key = shape_key(shape[-2], shape[-1], shape[-1], dtype)
     if persist:
         save_entry(op, key, best_cfg)
     return dict(best_cfg, key=key, seconds=round(best_t, 4))
@@ -242,9 +279,11 @@ def main(argv=None) -> int:
                     help=f"one of {sorted(CANDIDATES)}")
     ap.add_argument("--size", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--dtype", default=None, choices=(None, "f32", "packed"),
+                    help="cell dtype to tune (packed = int16/uint32 cells)")
     ap.add_argument("--no-persist", action="store_true")
     args = ap.parse_args(argv)
-    res = autotune(args.op, args.size, batch=args.batch,
+    res = autotune(args.op, args.size, batch=args.batch, dtype=args.dtype,
                    persist=not args.no_persist)
     print(f"[autotune] {args.op} @ {res.pop('key')}: best {res}")
     if not args.no_persist:

@@ -19,14 +19,17 @@ from . import autotune, ref
 from .minplus import minplus_matmul_pallas
 from .reachability import reachability_step_pallas
 from .seghist import value_histogram_pallas
-from .semiring import (BOOLEAN, COUNTING, TROPICAL, TROPICAL_COUNT,
-                       frontier_step_batched_pallas, frontier_step_pallas,
+from .semiring import (BOOLEAN, COUNTING, DIST_UNREACHED, TROPICAL,
+                       TROPICAL_COUNT, frontier_step_batched_pallas,
+                       frontier_step_packed_batched_pallas,
+                       frontier_step_packed_pallas, frontier_step_pallas,
                        semiring_matmul_batched_pallas, semiring_matmul_pallas)
 
 __all__ = ["minplus_matmul", "reachability_step", "value_histogram",
            "count_matmul", "minplus_count_matmul", "frontier_step",
-           "batched_minplus_matmul", "batched_count_matmul",
-           "batched_frontier_step"]
+           "frontier_step_packed", "batched_minplus_matmul",
+           "batched_count_matmul", "batched_frontier_step",
+           "batched_frontier_step_packed"]
 
 # CPU containers run the kernels through the Pallas interpreter; on TPU flip
 # this (or pass interpret=False explicitly) to run compiled Mosaic kernels.
@@ -160,6 +163,34 @@ def frontier_step(f: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray,
     return _frontier_step_jit(f, a, d, **cfg)
 
 
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _frontier_step_packed_jit(f: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray,
+                              bm: int, bn: int, bk: int) -> jnp.ndarray:
+    m, n = f.shape[0], a.shape[1]
+    fp = _pad_to(f.astype(jnp.uint32), bm, bk, 0)
+    ap = _pad_to(a, bk, bn, 0)  # uint8 {0,1} panels (or f32 — kernel casts)
+    # dist pads with the unreached sentinel; padded counts stay 0, so the
+    # first-reach mask never fires in the padding
+    dp = _pad_to(d.astype(jnp.int16), bm, bn, DIST_UNREACHED)
+    out = frontier_step_packed_pallas(fp, ap, dp, bm=bm, bn=bn, bk=bk,
+                                      interpret=INTERPRET)
+    return out[:m, :n]
+
+
+def frontier_step_packed(f: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray,
+                         bm: int = None, bn: int = None,
+                         bk: int = None) -> jnp.ndarray:
+    """Packed-cell fused wavefront step: uint32 frontier x uint8 adjacency
+    with int16 distances; newly-reached counts saturate at MULT_SAT (never
+    wrap). Bit-equal (as integers) to :func:`frontier_step` while counts
+    stay below MULT_SAT. Block shapes resolve under the ``:packed`` dtype
+    key, so narrow kernels tune independently of the f32 ones.
+    """
+    cfg = autotune.resolve("frontier_step", f.shape[0], a.shape[1],
+                           f.shape[1], dtype="packed", bm=bm, bn=bn, bk=bk)
+    return _frontier_step_packed_jit(f, a, d, **cfg)
+
+
 def _pad_to_batched(x: jnp.ndarray, bm: int, bn: int, fill) -> jnp.ndarray:
     _, m, n = x.shape
     pm, pn = (-m) % bm, (-n) % bn
@@ -235,6 +266,29 @@ def batched_frontier_step(f: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray,
     return _batched_frontier_step_jit(f, a, d, **cfg)
 
 
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _batched_frontier_step_packed_jit(f: jnp.ndarray, a: jnp.ndarray,
+                                      d: jnp.ndarray, bm: int, bn: int,
+                                      bk: int) -> jnp.ndarray:
+    m, n = f.shape[1], a.shape[2]
+    fp = _pad_to_batched(f.astype(jnp.uint32), bm, bk, 0)
+    ap = _pad_to_batched(a, bk, bn, 0)
+    dp = _pad_to_batched(d.astype(jnp.int16), bm, bn, DIST_UNREACHED)
+    out = frontier_step_packed_batched_pallas(fp, ap, dp, bm=bm, bn=bn,
+                                              bk=bk, interpret=INTERPRET)
+    return out[:, :m, :n]
+
+
+def batched_frontier_step_packed(f: jnp.ndarray, a: jnp.ndarray,
+                                 d: jnp.ndarray, bm: int = None,
+                                 bn: int = None,
+                                 bk: int = None) -> jnp.ndarray:
+    """Stacked packed wavefront step over a leading batch axis."""
+    cfg = autotune.resolve("batched_frontier_step", f.shape[1], a.shape[2],
+                           f.shape[2], dtype="packed", bm=bm, bn=bn, bk=bk)
+    return _batched_frontier_step_packed_jit(f, a, d, **cfg)
+
+
 @functools.partial(jax.jit, static_argnames=("num_bins", "bm", "bn"))
 def value_histogram(x: jnp.ndarray, num_bins: int,
                     bm: int = 256, bn: int = 256) -> jnp.ndarray:
@@ -251,5 +305,6 @@ value_histogram_ref = ref.value_histogram_ref
 count_matmul_ref = ref.count_matmul_ref
 minplus_count_matmul_ref = ref.minplus_count_matmul_ref
 frontier_step_ref = ref.frontier_step_ref
+frontier_step_packed_ref = ref.frontier_step_packed_ref
 batched_minplus_matmul_ref = ref.batched_minplus_matmul_ref
 batched_count_matmul_ref = ref.batched_count_matmul_ref

@@ -6,9 +6,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .semiring import DIST_UNREACHED, MULT_DTYPE, MULT_SAT
+
 __all__ = [
     "minplus_matmul_ref", "reachability_step_ref", "value_histogram_ref",
     "count_matmul_ref", "minplus_count_matmul_ref", "frontier_step_ref",
+    "frontier_step_packed_ref",
     "batched_minplus_matmul_ref", "batched_count_matmul_ref",
 ]
 
@@ -56,6 +59,22 @@ def frontier_step_ref(f: jnp.ndarray, a: jnp.ndarray,
     operands and on stacks with a leading batch axis."""
     x = jnp.matmul(f.astype(jnp.float32), a.astype(jnp.float32))
     return jnp.where((x > 0) & (d == jnp.inf), x, 0.0)
+
+
+def frontier_step_packed_ref(f: jnp.ndarray, a: jnp.ndarray,
+                             d: jnp.ndarray) -> jnp.ndarray:
+    """Packed wavefront-step oracle over narrow cells.
+
+    ``f`` holds uint32 counts, ``d`` int16 distances (DIST_UNREACHED =
+    unreached). The counting product runs in f32 (matching the MXU
+    accumulator), newly-reached counts clamp at MULT_SAT — saturate, never
+    wrap — and come back as uint32. Works on 2D operands and on stacks with
+    a leading batch axis.
+    """
+    x = jnp.matmul(f.astype(jnp.float32), a.astype(jnp.float32))
+    new = (x > 0) & (d == DIST_UNREACHED)
+    return jnp.where(new, jnp.minimum(x, float(MULT_SAT)),
+                     0.0).astype(MULT_DTYPE)
 
 
 def batched_minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

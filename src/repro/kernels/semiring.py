@@ -35,10 +35,43 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "Semiring", "semiring_matmul_pallas", "semiring_matmul_batched_pallas",
     "frontier_step_pallas", "frontier_step_batched_pallas",
+    "frontier_step_packed_pallas", "frontier_step_packed_batched_pallas",
     "TROPICAL", "BOOLEAN", "COUNTING", "TROPICAL_COUNT",
+    "DIST_DTYPE", "MULT_DTYPE", "DIST_UNREACHED", "MULT_SAT",
+    "pack_dist", "unpack_dist",
 ]
 
 Fields = Tuple[jnp.ndarray, ...]
+
+# -- packed ("narrow cell") dtypes --------------------------------------------
+#
+# The extreme-scale engines store the per-pair state in narrow integer cells
+# instead of f32: distances in int16 (hop counts; every family here has
+# diameter << 32767) and multiplicities in a *saturating* uint32 counter.
+# The MXU still accumulates products in f32, whose integer range is exact
+# only below 2**24 — so the saturation point is 2**24, not 2**32: any count
+# that reaches MULT_SAT is clamped there (never wrapped) and the engine
+# raises a saturation flag. Where values fit (dist < 32767, mult < 2**24)
+# the packed engines are bit-equal to the f32 engines.
+
+#: packed distance dtype; DIST_UNREACHED (int16 max) plays the role of +inf.
+DIST_DTYPE = jnp.int16
+#: packed multiplicity dtype — stores exact counts up to MULT_SAT.
+MULT_DTYPE = jnp.uint32
+#: sentinel for "not yet reached" in packed distance cells.
+DIST_UNREACHED = 32767
+#: saturation point for packed counts: the f32 exact-integer ceiling.
+MULT_SAT = 2 ** 24
+
+
+def pack_dist(d: jnp.ndarray) -> jnp.ndarray:
+    """f32 distances (+inf = unreached) -> int16 (DIST_UNREACHED sentinel)."""
+    return jnp.where(jnp.isfinite(d), d, DIST_UNREACHED).astype(DIST_DTYPE)
+
+
+def unpack_dist(d: jnp.ndarray) -> jnp.ndarray:
+    """int16 packed distances -> f32 with +inf for unreached."""
+    return jnp.where(d == DIST_UNREACHED, jnp.inf, d.astype(jnp.float32))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,14 +155,19 @@ def _vpu_kernel(*refs, sr: Semiring, sub_k: int):
 
 
 def _mxu_kernel(a_ref, b_ref, o_ref, acc_ref, *, sr: Semiring, k_blocks: int):
-    """Fused dot-accumulate + epilogue; counts never leave VMEM."""
+    """Fused dot-accumulate + epilogue; counts never leave VMEM.
+
+    Operands are cast to f32 in-register before the dot (a no-op for the f32
+    engines), so narrow packed inputs — uint8 adjacency panels, uint32
+    frontiers — ride the same body and only pay f32 width inside VMEM.
+    """
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot(
-        a_ref[...], b_ref[...],
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
 
@@ -168,7 +206,7 @@ def _mxu_kernel_batched(a_ref, b_ref, o_ref, acc_ref, *, sr: Semiring,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot(
-        a_ref[0], b_ref[0],
+        a_ref[0].astype(jnp.float32), b_ref[0].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
 
@@ -219,6 +257,55 @@ def _frontier_kernel_batched(f_ref, a_ref, d_ref, o_ref, acc_ref, *,
         acc = acc_ref[...]
         new = (acc > 0.0) & (d_ref[0] == jnp.inf)
         o_ref[...] = jnp.where(new, acc, 0.0).astype(o_ref.dtype)[None]
+
+
+def _frontier_kernel_packed(f_ref, a_ref, d_ref, o_ref, acc_ref, *,
+                            k_blocks: int):
+    """Packed-cell fused BFS frontier step with a saturating epilogue.
+
+    Same dot-accumulate as :func:`_frontier_kernel` (the MXU accumulates in
+    f32 regardless of storage dtype), but the state is narrow: the frontier
+    is uint32 counts, the adjacency panel uint8, the dist block int16 with
+    DIST_UNREACHED as the +inf sentinel. The epilogue clamps newly-reached
+    counts at MULT_SAT — the f32 exact-integer ceiling — so an overflowing
+    multiplicity saturates (detectably: the value *is* MULT_SAT) instead of
+    wrapping.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        f_ref[...].astype(jnp.float32), a_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_blocks - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        new = (acc > 0.0) & (d_ref[...] == DIST_UNREACHED)
+        sat = jnp.minimum(acc, float(MULT_SAT))
+        o_ref[...] = jnp.where(new, sat, 0.0).astype(o_ref.dtype)
+
+
+def _frontier_kernel_packed_batched(f_ref, a_ref, d_ref, o_ref, acc_ref, *,
+                                    k_blocks: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        f_ref[0].astype(jnp.float32), a_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == k_blocks - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        new = (acc > 0.0) & (d_ref[0] == DIST_UNREACHED)
+        sat = jnp.minimum(acc, float(MULT_SAT))
+        o_ref[...] = jnp.where(new, sat, 0.0).astype(o_ref.dtype)[None]
 
 
 def frontier_step_pallas(f: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray, *,
@@ -280,19 +367,88 @@ def frontier_step_batched_pallas(f: jnp.ndarray, a: jnp.ndarray,
     )(f, a, d)
 
 
+def frontier_step_packed_pallas(f: jnp.ndarray, a: jnp.ndarray,
+                                d: jnp.ndarray, *,
+                                bm: int = 128, bn: int = 128, bk: int = 128,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Packed fused wavefront step over narrow cells.
+
+    ``f`` is the (M, K) uint32 multiplicity frontier, ``a`` the (K, N)
+    adjacency (uint8 {0,1} panels — or f32, the kernel casts), ``d`` the
+    (M, N) int16 running distances (DIST_UNREACHED = unreached). Returns the
+    uint32 masked next frontier with counts clamped at MULT_SAT; a returned
+    cell equal to MULT_SAT means the true multiplicity may exceed it (the
+    host wrappers surface this as a saturation flag). Below MULT_SAT the
+    result is bit-equal (as integers) to :func:`frontier_step_pallas`.
+    """
+    m, k = f.shape
+    k2, n = a.shape
+    assert k == k2 and d.shape == (m, n), (f.shape, a.shape, d.shape)
+    assert d.dtype == DIST_DTYPE, d.dtype
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (f.shape, a.shape, (bm, bn, bk))
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel_packed, k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), MULT_DTYPE),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(f, a, d)
+
+
+def frontier_step_packed_batched_pallas(f: jnp.ndarray, a: jnp.ndarray,
+                                        d: jnp.ndarray, *,
+                                        bm: int = 128, bn: int = 128,
+                                        bk: int = 128,
+                                        interpret: bool = True) -> jnp.ndarray:
+    """Stacked packed wavefront step over a leading batch axis."""
+    nb, m, k = f.shape
+    nb2, k2, n = a.shape
+    assert nb == nb2 and k == k2 and d.shape == (nb, m, n), \
+        (f.shape, a.shape, d.shape)
+    assert d.dtype == DIST_DTYPE, d.dtype
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (f.shape, a.shape, (bm, bn, bk))
+    grid = (nb, m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel_packed_batched, k_blocks=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+            pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), MULT_DTYPE),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(f, a, d)
+
+
 # -- entry point --------------------------------------------------------------
 
 def semiring_matmul_pallas(sr: Semiring, a: Fields, b: Fields, *,
                            bm: int = 128, bn: int = 128, bk: int = 128,
-                           sub_k: int = 8, interpret: bool = True) -> Fields:
+                           sub_k: int = 8, interpret: bool = True,
+                           out_dtype=None) -> Fields:
     """Blocked (M, K) x (K, N) product over ``sr``; returns one array per field.
 
     M, N, K must divide into blocks (use `ops` for auto-padding).
     ``interpret=True`` executes the kernel body on CPU (this container);
-    on TPU pass interpret=False.
+    on TPU pass interpret=False. ``out_dtype`` (MXU path only) overrides the
+    output dtype — the packed engines dot uint32 frontiers against uint8
+    panels and take the f32 accumulator out directly.
     """
     nf = sr.num_fields
     assert len(a) == nf and len(b) == nf, (len(a), len(b), nf)
+    assert out_dtype is None or sr.mxu, "out_dtype is an MXU-path control"
     m, k = a[0].shape
     k2, n = b[0].shape
     assert k == k2, (a[0].shape, b[0].shape)
@@ -305,7 +461,8 @@ def semiring_matmul_pallas(sr: Semiring, a: Fields, b: Fields, *,
     a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
     b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
     o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
-    out_shape = [jax.ShapeDtypeStruct((m, n), x.dtype) for x in a]
+    out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype or x.dtype)
+                 for x in a]
 
     if sr.mxu:
         kernel = functools.partial(_mxu_kernel, sr=sr, k_blocks=grid[2])
@@ -328,8 +485,8 @@ def semiring_matmul_pallas(sr: Semiring, a: Fields, b: Fields, *,
 
 def semiring_matmul_batched_pallas(sr: Semiring, a: Fields, b: Fields, *,
                                    bm: int = 128, bn: int = 128, bk: int = 128,
-                                   sub_k: int = 8,
-                                   interpret: bool = True) -> Fields:
+                                   sub_k: int = 8, interpret: bool = True,
+                                   out_dtype=None) -> Fields:
     """Batched (B, M, K) x (B, K, N) product over ``sr`` — one kernel launch
     for a whole stack of independent problems (the equal-cost sweep driver's
     hot path: every topology's padded adjacency block rides the leading
@@ -337,6 +494,7 @@ def semiring_matmul_batched_pallas(sr: Semiring, a: Fields, b: Fields, *,
     index as the outermost grid dimension."""
     nf = sr.num_fields
     assert len(a) == nf and len(b) == nf, (len(a), len(b), nf)
+    assert out_dtype is None or sr.mxu, "out_dtype is an MXU-path control"
     nb, m, k = a[0].shape
     nb2, k2, n = b[0].shape
     assert nb == nb2 and k == k2, (a[0].shape, b[0].shape)
@@ -349,7 +507,8 @@ def semiring_matmul_batched_pallas(sr: Semiring, a: Fields, b: Fields, *,
     a_spec = pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk))
     b_spec = pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j))
     o_spec = pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j))
-    out_shape = [jax.ShapeDtypeStruct((nb, m, n), x.dtype) for x in a]
+    out_shape = [jax.ShapeDtypeStruct((nb, m, n), out_dtype or x.dtype)
+                 for x in a]
 
     if sr.mxu:
         kernel = functools.partial(_mxu_kernel_batched, sr=sr,

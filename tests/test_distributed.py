@@ -237,6 +237,35 @@ def test_tiled_non_power_of_two_panels_and_big_tile():
     np.testing.assert_array_equal(want_m, m)
 
 
+def test_widest_divisor_block_any_multiplier():
+    # 100k-class padded extents rarely have big power-of-two factors —
+    # the sweep's block picker must use ANY 128-multiple divisor
+    assert D.widest_divisor_block(104960, 16384) == 10496   # 128 x 82
+    assert D.widest_divisor_block(131072, 16384) == 16384   # power of two
+    assert D.widest_divisor_block(640, 16384) == 640
+    assert D.widest_divisor_block(128, 16384) == 128
+    assert D.widest_divisor_block(104960, 128) == 128
+    for size in (640, 104960, 99840):
+        b = D.widest_divisor_block(size, 16384)
+        assert size % b == 0 and b % 128 == 0 and b <= 16384
+
+
+def test_tiled_explicit_non_power_of_two_block():
+    # explicit block= that is a 128-multiple but not a power of two
+    # (640 = 5 x 128 divides pc): bit-equal to the default grid
+    g = T.make("jellyfish", n=600, r=10, seed=2)
+    want_d, want_m = WF.wavefront_dist_mult(g.adjacency_dense(np.float32))
+    from repro.kernels.semiring import DIST_UNREACHED
+
+    for packed in (False, True):
+        d, m = D.tiled_dist_mult(g, tile_rows=600, packed=packed, block=640)
+        if packed:
+            d = np.where(d == DIST_UNREACHED, np.inf, d.astype(np.float32))
+            m = m.astype(np.float32)
+        np.testing.assert_array_equal(want_d, d)
+        np.testing.assert_array_equal(want_m, m)
+
+
 def test_apsp_dense_rejects_conflicting_tiled_knobs():
     g = T.make("slimfly", q=5)
     with pytest.raises(ValueError, match="tile_rows"):
@@ -306,6 +335,89 @@ def test_shard_count_and_padding_helpers():
     assert p % (8 * 128) == 0 and p % col == 0 and (p // 8) % row == 0
 
 
+# -- composed engine: sharded adjacency x streamed source tiles ----------------
+
+def _assemble(tiles, k, n, ddt, mdt):
+    d = np.empty((k, n), ddt)
+    m = np.empty((k, n), mdt)
+    at = 0
+    for r0, r1, dt, mt in tiles:
+        assert (r0, r1) == (at, at + dt.shape[0])
+        d[r0:r1], m[r0:r1] = dt, mt
+        at = r1
+    assert at == k
+    return d, m
+
+
+@pytest.mark.parametrize("packed", [False, True])
+@needs2
+def test_composed_bit_equal_to_tiled(packed):
+    g = T.make("jellyfish", n=137, r=5, seed=3)
+    want = _assemble(D.tiled_dist_mult_tiles(g, tile_rows=48, packed=packed),
+                     g.n, g.n, *(("int16", "uint32") if packed
+                                 else ("float32", "float32")))
+    for p in _shard_counts():
+        got = _assemble(
+            D.composed_dist_mult_tiles(g, D.device_mesh(p), tile_rows=48,
+                                       packed=packed),
+            g.n, g.n, want[0].dtype, want[1].dtype)
+        np.testing.assert_array_equal(want[0], got[0])
+        np.testing.assert_array_equal(want[1], got[1])
+
+
+@needs2
+def test_composed_source_ids_sampled_rows():
+    g = T.make("slimfly", q=13)
+    want_d, want_m = D.tiled_dist_mult(g)
+    ids = [1, 9, 33, 34, 80]
+    tiles = list(D.composed_dist_mult_tiles(g, D.device_mesh(2), tile_rows=3,
+                                            source_ids=ids))
+    assert [(r0, r1) for r0, r1, _, _ in tiles] == [(0, 3), (3, 5)]
+    rows = np.concatenate([d for _, _, d, _ in tiles])
+    mrows = np.concatenate([m for _, _, _, m in tiles])
+    np.testing.assert_array_equal(want_d[ids], rows)
+    np.testing.assert_array_equal(want_m[ids], mrows)
+
+
+@needs2
+def test_composed_budget_bounds_the_per_device_panel():
+    g = T.make("slimfly", q=5)
+    mesh = D.device_mesh(2)
+    with pytest.raises(ValueError, match="per-device adjacency panel"):
+        next(D.composed_dist_mult_tiles(g, mesh, adjacency_budget=1))
+    # packed panels are 4x smaller: a budget that rejects f32 can admit
+    # uint8 — the error message's own escape hatch
+    kp_p = (D._pad128(g.n) + (-D._pad128(g.n)) % (2 * 128)) ** 2 // 2
+    d, m = _assemble(
+        D.composed_dist_mult_tiles(g, mesh, adjacency_budget=kp_p,
+                                   packed=True),
+        g.n, g.n, "int16", "uint32")
+    want_d, want_m = D.tiled_dist_mult(g, packed=True)
+    np.testing.assert_array_equal(want_d, d)
+    np.testing.assert_array_equal(want_m, m)
+
+
+def test_composed_single_shard_mesh_delegates_to_tiled():
+    g = T.make("slimfly", q=5)
+    want_d, want_m = D.tiled_dist_mult(g, tile_rows=16)
+    d, m = _assemble(D.composed_dist_mult_tiles(g, None, tile_rows=16),
+                     g.n, g.n, "float32", "float32")
+    np.testing.assert_array_equal(want_d, d)
+    np.testing.assert_array_equal(want_m, m)
+
+
+@needs2
+def test_mesh_and_tile_rows_compose_through_apsp_dense():
+    g = T.make("jellyfish", n=100, r=5, seed=0)
+    want = apsp_dense(g)
+    got = apsp_dense(g, mesh=D.device_mesh(2), tile_rows=32)
+    np.testing.assert_array_equal(want, got)
+    d, m = shortest_path_multiplicity(g, mesh=D.device_mesh(2), tile_rows=32)
+    want_d, want_m = shortest_path_multiplicity(g)
+    np.testing.assert_array_equal(want_d, d)
+    np.testing.assert_array_equal(want_m, m)
+
+
 # -- the extreme-scale memory-budget gate (slow soak) --------------------------
 
 @pytest.mark.slow
@@ -333,6 +445,41 @@ def test_16k_tiled_out_of_core_under_memory_budget():
     assert summary["single_buffer_mb"] > budget_mb, summary
     assert summary["peak_rss_mb"] < budget_mb, summary
     print(f"[16k] peak_rss={summary['peak_rss_mb']}MB "
+          f"single_buffer={summary['single_buffer_mb']}MB "
+          f"elapsed={summary['elapsed_s']}s")
+
+
+@pytest.mark.slow
+def test_32k_composed_packed_under_memory_budget():
+    """Composed engine soak: 32768 routers, 8 (fake) shards, packed cells.
+    The f32 sharded adjacency alone would be 4 GiB; uint8 panels fit the
+    whole run (panels + packed dist/mult tiles + host CSR + the 8 faked
+    XLA host devices' overhead) under 6 GiB.
+    The subprocess forces 8 host devices itself, so this runs in the soak
+    job (which sets no XLA_FLAGS); the oracle spot-check transitively
+    certifies equality with the tiled and wavefront engines."""
+    budget_mb = 6144.0
+    env = {**__import__("os").environ, "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.analysis.distributed",
+         "--routers", "32768", "--degree", "16", "--tile-rows", "128",
+         "--sources", "64", "--packed", "--shards", "8", "--check", "2",
+         "--block", "4096"],
+        capture_output=True, text=True, timeout=5400, check=True, env=env,
+        cwd=str(__import__("pathlib").Path(__file__).resolve().parents[1]))
+    assert "oracle spot-check OK" in out.stdout, out.stdout + out.stderr
+    summary = json.loads(out.stdout[out.stdout.index("{"):])
+    assert summary["routers"] == 32768
+    assert summary["rows_analyzed"] == 64
+    assert summary["shards"] == 8
+    assert summary["packed"] is True
+    # jellyfish r=16 keeps sigma well below 2**24 — clean, not clamped
+    assert summary["saturated"] is False
+    assert summary["diameter"] >= 3 and summary["mult_mean"] >= 1.0
+    assert summary["single_buffer_mb"] > budget_mb, summary
+    assert summary["peak_rss_mb"] < budget_mb, summary
+    print(f"[32k composed] peak_rss={summary['peak_rss_mb']}MB "
           f"single_buffer={summary['single_buffer_mb']}MB "
           f"elapsed={summary['elapsed_s']}s")
 

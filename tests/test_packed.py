@@ -1,0 +1,224 @@
+"""Packed-cell engine contracts: int16 dist + saturating uint32 mult.
+
+The packed engines (wavefront, tiled, composed) must be BIT-equal to the
+f32 engines wherever the values fit the narrow cells — distances below
+int16's DIST_UNREACHED sentinel, multiplicities below the MULT_SAT = 2**24
+f32-accumulator ceiling. Where they don't fit, counts saturate (clamp +
+flag) and NEVER wrap. The autotuner keys packed entries separately from
+f32 so the two engines tune independently.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import topology as T
+from repro.core.analysis import distributed as D
+from repro.core.analysis import wavefront as WF
+from repro.core.analysis.engine_select import resolve_engine
+from repro.core.analysis.paths import shortest_path_multiplicity
+from repro.core.graph import Graph
+from repro.kernels import autotune, ops
+from repro.kernels.semiring import (DIST_DTYPE, DIST_UNREACHED, MULT_DTYPE,
+                                    MULT_SAT, pack_dist, unpack_dist)
+
+
+def _unpack(d, m):
+    dist = np.where(d == DIST_UNREACHED, np.inf, d).astype(np.float32)
+    return dist, m.astype(np.float32)
+
+
+# -- bit-equality vs the f32 engine, every registered family -------------------
+
+@pytest.mark.parametrize("fam", T.families())
+def test_packed_wavefront_bit_equal_all_families(fam):
+    g = T.by_servers(fam, 300)
+    adj = g.adjacency_dense(np.float32)
+    want_d, want_m = WF.wavefront_dist_mult(adj)
+    d, m = WF.wavefront_dist_mult(adj, packed=True)
+    assert d.dtype == DIST_DTYPE and m.dtype == MULT_DTYPE
+    got_d, got_m = _unpack(d, m)
+    np.testing.assert_array_equal(want_d, got_d)
+    np.testing.assert_array_equal(want_m, got_m)
+
+
+def test_packed_tiled_bit_equal_resident_and_streaming():
+    g = T.make("jellyfish", n=96, r=6, seed=0)
+    want_d, want_m = D.tiled_dist_mult(g, tile_rows=32)
+    for budget in (D._ADJ_BUDGET, 1):          # resident, then streamed
+        d, m = D.tiled_dist_mult(g, tile_rows=32, packed=True,
+                                 adjacency_budget=budget)
+        got_d, got_m = _unpack(d, m)
+        np.testing.assert_array_equal(want_d, got_d)
+        np.testing.assert_array_equal(want_m, got_m)
+
+
+def test_packed_tiled_source_ids_rows():
+    g = T.make("slimfly", q=13)
+    want_d, want_m = D.tiled_dist_mult(g)
+    ids = [1, 9, 33, 34, 80]
+    tiles = list(D.tiled_dist_mult_tiles(g, tile_rows=3, source_ids=ids,
+                                         packed=True))
+    assert [(r0, r1) for r0, r1, _, _ in tiles] == [(0, 3), (3, 5)]
+    rows = np.concatenate([d for _, _, d, _ in tiles])
+    mrows = np.concatenate([m for _, _, _, m in tiles])
+    got_d, got_m = _unpack(rows, mrows)
+    np.testing.assert_array_equal(want_d[ids], got_d)
+    np.testing.assert_array_equal(want_m[ids], got_m)
+
+
+# -- saturation: clamp + flag, never wrap --------------------------------------
+
+def _multiplier_chain(width: int, stages: int) -> Graph:
+    """Chained K_{1,width,1} blocks: sigma(source, stage-s tail) =
+    width**s, so a handful of stages overflows 2**24 deterministically."""
+    edges = []
+    node = 1
+    prev = 0
+    for _ in range(stages):
+        mids = list(range(node, node + width))
+        tail = node + width
+        node = tail + 1
+        edges += [(prev, v) for v in mids] + [(v, tail) for v in mids]
+        prev = tail
+    return Graph(n=node, edges=np.array(edges))
+
+
+def test_saturation_clamps_and_flags_never_wraps():
+    g = _multiplier_chain(width=48, stages=5)     # 48**5 = 2**27.9 > 2**24
+    true_sigma = 48.0 ** np.arange(6)
+    with pytest.warns(RuntimeWarning, match="saturat"):
+        d, m = WF.wavefront_dist_mult(g.adjacency_dense(np.float32),
+                                      packed=True)
+    # tail of stage s sits at node index s * (width + 1)
+    for s in range(1, 6):
+        tail = s * 49
+        want = min(true_sigma[s], MULT_SAT)
+        assert int(m[0, tail]) == int(want), (s, int(m[0, tail]), want)
+        assert int(d[0, tail]) == 2 * s
+    # saturated cells clamp EXACTLY at MULT_SAT — a wrap would show
+    # 48**5 mod 2**32 or an f32 rounding artifact instead
+    assert int(m[0, 5 * 49]) == MULT_SAT
+
+
+def test_saturation_flag_in_tiled_summary():
+    g = _multiplier_chain(width=48, stages=5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        s = D.tiled_summary(g, tile_rows=64, packed=True)
+    assert s["packed"] is True and s["saturated"] is True
+    clean = D.tiled_summary(T.make("slimfly", q=5), packed=True)
+    assert clean["saturated"] is False
+
+
+def test_unsaturated_packed_counts_are_exact_not_clamped():
+    g = _multiplier_chain(width=8, stages=5)      # 8**5 = 2**15 << 2**24
+    d, m = WF.wavefront_dist_mult(g.adjacency_dense(np.float32),
+                                  packed=True)
+    assert int(m[0, 5 * 9]) == 8 ** 5
+
+
+# -- pack/unpack round trip ----------------------------------------------------
+
+def test_pack_unpack_dist_round_trip():
+    d = jnp.asarray([0.0, 1.0, 300.0, np.inf, 32766.0], jnp.float32)
+    packed = pack_dist(d)
+    assert packed.dtype == DIST_DTYPE
+    assert int(packed[3]) == DIST_UNREACHED
+    np.testing.assert_array_equal(np.asarray(unpack_dist(packed)),
+                                  np.asarray(d))
+
+
+def test_packed_frontier_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    f = rng.integers(0, 50, (40, 70)).astype(np.uint32)
+    a = (rng.random((70, 90)) < 0.2).astype(np.uint8)
+    dist = np.where(rng.random((40, 90)) < 0.5, 3,
+                    DIST_UNREACHED).astype(np.int16)
+    got = ops.frontier_step_packed(f, a, dist)
+    want = ops.frontier_step_packed_ref(jnp.asarray(f), jnp.asarray(a),
+                                        jnp.asarray(dist))
+    assert got.dtype == MULT_DTYPE
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    fb = np.stack([f, f * 2])
+    ab = np.stack([a, a])
+    db = np.stack([dist, dist])
+    got_b = ops.batched_frontier_step_packed(fb, ab, db)
+    want_b = ops.frontier_step_packed_ref(jnp.asarray(fb), jnp.asarray(ab),
+                                          jnp.asarray(db))
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+
+# -- autotuner: packed entries key separately ----------------------------------
+
+def test_autotune_packed_dtype_key_precedence(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_TABLE", str(tmp_path / "table.json"))
+    autotune.load_table(refresh=True)
+    try:
+        key_f32 = autotune.shape_key(4096, 4096, 4096)
+        key_packed = autotune.shape_key(4096, 4096, 4096, dtype="packed")
+        assert key_packed == key_f32 + ":packed"
+        autotune.save_entry("frontier_step", key_f32,
+                            {"bm": 256, "bn": 256, "bk": 256})
+        autotune.save_entry("frontier_step", key_packed,
+                            {"bm": 512, "bn": 512, "bk": 512})
+        # an f32 lookup never reads the packed entry and vice versa
+        assert autotune.resolve("frontier_step", 4096, 4096,
+                                4096)["bm"] == 256
+        assert autotune.resolve("frontier_step", 4096, 4096, 4096,
+                                dtype="packed")["bm"] == 512
+        # an untuned packed shape falls back to the op default, NOT to the
+        # f32 tuned entry (the packed kernel's best blocks differ)
+        other = autotune.resolve("frontier_step", 8192, 8192, 8192,
+                                 dtype="packed")
+        assert other == dict(autotune.DEFAULTS["frontier_step"])
+        # explicit arguments still beat the table
+        over = autotune.resolve("frontier_step", 4096, 4096, 4096,
+                                dtype="packed", bm=128)
+        assert over["bm"] == 128 and over["bk"] == 512
+    finally:
+        monkeypatch.delenv("REPRO_TUNE_TABLE")
+        autotune.load_table(refresh=True)
+
+
+# -- the knob resolver matrix --------------------------------------------------
+
+def test_resolver_matrix():
+    assert resolve_engine().engine == "wavefront"
+    assert resolve_engine(packed=True).engine == "wavefront"
+    assert resolve_engine(tile_rows=64).engine == "tiled"
+    assert resolve_engine(sources=(0, 8)).engine == "tiled"
+    assert resolve_engine(source_ids=[1, 2]).engine == "tiled"
+    assert resolve_engine(use_kernel=False).engine == "squaring"
+    assert resolve_engine(method="squaring").engine == "squaring"
+    mesh = D.device_mesh(1)
+    # a single-device mesh degrades to the unsharded engines
+    assert resolve_engine(mesh=mesh).engine == "wavefront"
+    assert resolve_engine(mesh=mesh, tile_rows=8).engine == "tiled"
+
+
+def test_resolver_rejects_impossible_combos():
+    for kw in (dict(method="squaring", tile_rows=8),
+               dict(method="squaring", packed=True),
+               dict(method="squaring", sources=(0, 4)),
+               dict(use_kernel=False, tile_rows=8),
+               dict(use_kernel=False, packed=True)):
+        with pytest.raises(ValueError, match="cannot honor"):
+            resolve_engine(**kw)
+    with pytest.raises(ValueError, match="unknown APSP method"):
+        resolve_engine(method="nope")
+
+
+def test_packed_knob_via_shortest_path_multiplicity():
+    g = T.make("slimfly", q=5)
+    want_d, want_m = shortest_path_multiplicity(g)
+    d, m = shortest_path_multiplicity(g, packed=True)
+    assert d.dtype == DIST_DTYPE and m.dtype == MULT_DTYPE
+    got_d, got_m = _unpack(d, m)
+    np.testing.assert_array_equal(want_d, got_d)
+    np.testing.assert_array_equal(want_m, got_m)
+    d2, m2 = shortest_path_multiplicity(g, packed=True, tile_rows=16)
+    np.testing.assert_array_equal(d, d2)
+    np.testing.assert_array_equal(m, m2)
