@@ -1,0 +1,109 @@
+"""Resilience bench: one batched severity pass vs the per-mask Python loop.
+
+The acceptance row for the fault-injection engine: >=1000 failure masks per
+severity evaluated in ONE stacked pass (`evaluate_failure_batch`) must beat
+the naive per-mask loop — rebuild the failed `Graph`, run the single-graph
+engine (`apsp_dense` + `shortest_path_multiplicity` + ECMP loads), extract
+per-mask metrics — by at least 5x. The loop is timed on a mask subsample
+and reported per-mask; the stacked pass is timed end to end over the full
+batch, so the speedup column compares amortized per-mask cost on both
+sides. The `>=5x` gate is a hard assert (skipped under --quick, like the
+analyze gate) so CI fails if the stacked path ever degenerates into a
+hidden per-sample loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.analysis.apsp import apsp_dense
+from repro.core.analysis.paths import shortest_path_multiplicity
+from repro.core.graph import Graph
+from repro.core.resilience import failure_batch, failure_plan
+from repro.core.resilience.degradation import evaluate_failure_batch
+from repro.core.routing.assign import ecmp_all_pairs_loads
+
+#: minimum amortized speedup of the stacked severity pass over the
+#: per-mask loop (the acceptance criterion for the resilience engine)
+MIN_SPEEDUP = 5.0
+
+
+def _naive_per_mask(g: Graph, edge_failed: np.ndarray) -> dict:
+    """One mask through the single-graph entry points — the loop body the
+    stacked engine replaces."""
+    gs = Graph(n=g.n, edges=g.edges[~edge_failed], name=g.name)
+    dist = apsp_dense(gs, use_kernel=False)
+    _, mult = shortest_path_multiplicity(gs, dist, use_kernel=False)
+    loads = ecmp_all_pairs_loads(dist[None], mult[None],
+                                 gs.adjacency_dense(np.float32)[None])
+    off = np.isfinite(dist) & (dist > 0)
+    peak = float(loads.max())
+    return {
+        "reachable_frac": float(off.sum()) / max(1, g.n * (g.n - 1)),
+        "tput_lb": 1.0 / peak if off.any() and peak > 0 else 0.0,
+        "diameter": float(dist[off].max()) if off.any() else 0.0,
+        "avg_spl": float(dist[off].mean()) if off.any() else 0.0,
+        "mult_p50": float(np.percentile(mult[off], 50)) if off.any() else 0.0,
+    }
+
+
+def severity_pass(quick: bool = False) -> dict:
+    """Time one full-severity batch vs the per-mask loop; return the row."""
+    g = (T.make("hypercube", dim=6) if quick
+         else T.make("jellyfish", n=96, r=6, seed=0))
+    samples = 200 if quick else 1000
+    loop_masks = 5 if quick else 10
+    plan = failure_plan(g, kind="link", samples=samples, seed=0)
+    k = max(1, plan.n_units // 20)  # ~5% link failure severity
+    batch = failure_batch(plan, k)
+
+    t0 = time.perf_counter()
+    metrics = evaluate_failure_batch(g, batch, use_kernel=False, slack=False)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for s in range(loop_masks):
+        _naive_per_mask(g, batch.edge_failed[s])
+    t_loop = time.perf_counter() - t0
+
+    per_mask_batched = t_batched / samples
+    per_mask_loop = t_loop / loop_masks
+    row = {
+        "family": g.name, "routers": g.n, "failable_links": plan.n_units,
+        "k": k, "samples": samples, "loop_masks": loop_masks,
+        "batched_ms": round(t_batched * 1e3, 1),
+        "batched_per_mask_ms": round(per_mask_batched * 1e3, 3),
+        "loop_per_mask_ms": round(per_mask_loop * 1e3, 3),
+        "speedup": round(per_mask_loop / per_mask_batched, 2),
+        "mean_reachable_frac": round(float(metrics["reachable_frac"].mean()),
+                                     5),
+        "mean_tput_lb": round(float(metrics["tput_lb"].mean()), 5),
+    }
+    # hard acceptance gate: a regression here means the stacked pass has
+    # re-grown a per-sample loop somewhere in the metric stack
+    if not quick:
+        assert row["speedup"] >= MIN_SPEEDUP, row
+    return row
+
+
+def run(quick: bool = False) -> List[dict]:
+    return [severity_pass(quick)]
+
+
+def baseline_section(quick: bool = False) -> dict:
+    """The resilience row of the perf-trajectory baseline artifact."""
+    return severity_pass(quick)
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

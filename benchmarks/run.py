@@ -1,7 +1,7 @@
 """Benchmark harness — one bench per paper table/figure.
 
   python -m benchmarks.run [--quick] [--only generation,analysis,...]
-  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_8.json
+  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_9.json
   python -m benchmarks.run --baseline --gate BENCH_5.json   # CI perf gate
 
   generation   Table-1 analogue: 10k/100k/1M-server generation scalability
@@ -9,11 +9,12 @@
   collectives  Fig-1 analogue: topology comparison under collective/traffic load
   kernels      Pallas kernel sweep + VMEM working sets
   roofline     the 40-cell dry-run roofline table (reads experiments/dryrun)
+  resilience   batched failure-sweep severity pass vs the per-mask loop
 
 ``--baseline`` runs the headline device-resident-vs-host-loop comparison
-(`bench_analysis.baseline`) and writes the repo-root ``BENCH_8.json``
+(`bench_analysis.baseline`) and writes the repo-root ``BENCH_9.json``
 trajectory artifact (single-graph analyze, sweep chain, throughput rounds,
-packed/estimator trajectory,
+packed/estimator trajectory, batched failure-sweep severity pass,
 with speedups over the host-looped reference) that CI uploads per run, so
 future PRs have a fixed-size perf trajectory to compare against.
 
@@ -33,7 +34,7 @@ import sys
 import time
 
 from . import (bench_analysis, bench_collectives, bench_generation,
-               bench_kernels, bench_roofline)
+               bench_kernels, bench_resilience, bench_roofline)
 
 BENCHES = {
     "generation": bench_generation,
@@ -41,13 +42,14 @@ BENCHES = {
     "collectives": bench_collectives,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
+    "resilience": bench_resilience,
 }
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 #: this PR sequence's baseline artifact (previous PRs' files stay committed
 #: at the repo root, giving the trajectory its history)
-BASELINE_NAME = "BENCH_8.json"
+BASELINE_NAME = "BENCH_9.json"
 
 #: a shared speedup column may lose at most this fraction vs the reference
 GATE_TOLERANCE = 0.30
@@ -167,6 +169,8 @@ def main() -> None:
         # time summary next to the numbers it explains
         obs.enable()
         summary = bench_analysis.baseline(quick=args.quick)
+        summary["resilience"] = bench_resilience.baseline_section(
+            quick=args.quick)
         summary["tier"] = "perf-trajectory"
         summary["meta"] = run_metadata()
         summary["spans"] = obs.span_summary()

@@ -822,7 +822,7 @@ def _peak_rss_mb() -> float:
 def tiled_summary(source, tile_rows: int = 512,
                   panel_rows: Optional[int] = None,
                   sources: Optional[Tuple[int, int]] = None,
-                  on_tile=None, **kw) -> Dict[str, object]:
+                  on_tile=None, checkpoint=None, **kw) -> Dict[str, object]:
     """Streaming aggregate of the tiled engine — no N x N buffer anywhere.
 
     Folds each (tile, n) dist/mult tile into diameter, reached-pair count,
@@ -836,6 +836,18 @@ def tiled_summary(source, tile_rows: int = 512,
 
     ``on_tile(r0, r1, dist, mult)``, when given, sees every tile before it
     is folded — callers spot-check rows without paying a second pass.
+
+    ``checkpoint=`` (a path) makes long runs crash-safe: after every
+    folded tile the partial aggregates are persisted atomically
+    (`resilience.checkpoint.TileCheckpoint`, write-to-temp + rename), and
+    a rerun with the same arguments resumes from the last completed tile —
+    tiles are independent and the fold order is preserved, so a
+    killed-and-resumed run returns aggregates BIT-identical to an
+    uninterrupted one. The file binds to the run via a fingerprint
+    (graph/array identity, tile_rows, packed, source selection); a
+    mismatched checkpoint raises instead of seeding the wrong run, and a
+    completed run removes its file. On resume ``on_tile`` only sees the
+    recomputed tiles.
     """
     import time
 
@@ -853,11 +865,49 @@ def tiled_summary(source, tile_rows: int = 512,
     mult_max = 0.0
     rows_done = 0
     tiles = 0
+
+    source_ids = kw.pop("source_ids", None)
+    ids_all, base = _resolve_source_ids(n, sources, source_ids)
+    eff_tile = max(1, min(tile_rows, len(ids_all)))
+    ckpt = fp = None
+    if checkpoint is not None:
+        from ..resilience.checkpoint import (TileCheckpoint,
+                                             source_fingerprint)
+
+        ckpt = TileCheckpoint(checkpoint)
+        fp = source_fingerprint(source, tile_rows, packed, sources=sources,
+                                source_ids=source_ids)
+        state = ckpt.load(fp)
+        if state is not None:
+            diam = state["diameter"]
+            pairs = state["reached_pairs"]
+            dist_sum = state["dist_sum"]
+            mult_sum = state["mult_sum"]
+            mult_min = np.inf if state["mult_min"] is None else state["mult_min"]
+            mult_max = state["mult_max"]
+            rows_done = state["rows_done"]
+            tiles = state["tiles"]
+            obs.log("tiled.resume", checkpoint=str(checkpoint),
+                    rows_done=rows_done, tiles=tiles)
+    # the pump restarts at the first incomplete tile; rows_done is always
+    # a whole number of tiles, so the remaining tile boundaries — and with
+    # them every yielded tile — are identical to the uninterrupted run's
+    if rows_done and base is not None:
+        kw_sel = dict(sources=(base + rows_done, base + len(ids_all)))
+    elif rows_done:
+        kw_sel = dict(source_ids=ids_all[rows_done:])
+    elif source_ids is not None:
+        kw_sel = dict(source_ids=source_ids)
+    else:
+        kw_sel = dict(sources=sources)
+    remaining = len(ids_all) - rows_done
+
     with obs.span("tiled.summary", cat="tiled", routers=n,
-                  tile_rows=tile_rows) as sp:
-        for r0, r1, d, m in tiled_dist_mult_tiles(source, tile_rows,
-                                                  panel_rows,
-                                                  sources=sources, **kw):
+                  tile_rows=tile_rows, resumed_rows=rows_done) as sp:
+        tile_iter = (tiled_dist_mult_tiles(source, eff_tile, panel_rows,
+                                           **kw_sel, **kw)
+                     if remaining > 0 else ())
+        for r0, r1, d, m in tile_iter:
             if on_tile is not None:
                 on_tile(r0, r1, d, m)
             # packed tiles carry the int16 DIST_UNREACHED sentinel instead
@@ -877,7 +927,17 @@ def tiled_summary(source, tile_rows: int = 512,
             tiles += 1
             obs.counter("tiled.tiles").add()
             obs.sample_process("tiled")
+            if ckpt is not None:
+                ckpt.save(fp, {
+                    "diameter": diam, "reached_pairs": pairs,
+                    "dist_sum": dist_sum, "mult_sum": mult_sum,
+                    "mult_min": None if mult_min == np.inf else mult_min,
+                    "mult_max": mult_max, "rows_done": rows_done,
+                    "tiles": tiles,
+                })
         sp.set(tiles=tiles, diameter=diam)
+    if ckpt is not None:
+        ckpt.remove()
     pc = _pad128(n)
     obs.gauge("tiled.peak_rss_mb").set(round(_peak_rss_mb(), 1))
     return {
@@ -1220,6 +1280,10 @@ def main(argv=None) -> int:
                          "per-block dispatch overhead at big sizes")
     ap.add_argument("--check", type=int, default=2,
                     help="spot-check this many sources vs the CSR oracle")
+    ap.add_argument("--checkpoint", default=None, metavar="FILE.json",
+                    help="crash-safe mode: persist partial aggregates "
+                         "after every tile (atomic write + rename) and "
+                         "resume from the last completed tile on rerun")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable tracing and write a Chrome trace-event "
                          "file (load in https://ui.perfetto.dev)")
@@ -1266,8 +1330,11 @@ def main(argv=None) -> int:
                             panel_rows=args.panel_rows, sources=srcs,
                             adjacency_budget=args.adjacency_budget,
                             packed=args.packed, mesh=mesh, block=args.block,
-                            on_tile=spot_check if args.check else None)
-    if args.check:
+                            on_tile=spot_check if args.check else None,
+                            checkpoint=args.checkpoint)
+    if args.check and not args.checkpoint:
+        # a checkpoint resume skips completed tiles, so the spot-check may
+        # legitimately see fewer sources than requested
         assert checked[0] == check_hi - check_lo, (checked[0], check_lo,
                                                   check_hi)
         obs.log("distributed.check", status="oracle spot-check OK",

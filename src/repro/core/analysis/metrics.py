@@ -222,6 +222,10 @@ class AnalysisEngine:
     # -- stage reports (summary dicts) -------------------------------------
 
     def _report_distances(self) -> Dict:
+        # the partitioned-graph contract: diameter / avg_path_length cover
+        # the reachable pairs, and disconnected_pair_fraction reports what
+        # they exclude (0.0 on connected graphs; exact over all ordered
+        # pairs in exact mode, the sampled-rows estimate otherwise)
         rep: Dict = {}
         if self.exact:
             dist = self.distances()
@@ -229,12 +233,16 @@ class AnalysisEngine:
             rep["diameter"] = int(finite.max())
             n = self.g.n
             rep["avg_path_length"] = float(finite.sum() / max(1, n * (n - 1)))
+            off = max(1, n * (n - 1))
+            reached = int((np.isfinite(dist).sum()) - n)   # minus diagonal
+            rep["disconnected_pair_fraction"] = 1.0 - reached / off
             rep["exact"] = True
         else:
             d = self.distances()
             reachable = d[d >= 0]
             rep["diameter"] = int(reachable.max())  # lower bound from sample
             rep["avg_path_length"] = float(reachable[reachable > 0].mean())
+            rep["disconnected_pair_fraction"] = float((d < 0).mean())
             rep["exact"] = False
         return rep
 

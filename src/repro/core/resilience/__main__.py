@@ -1,0 +1,5 @@
+"""``python -m repro.core.resilience`` -> the degradation-curve CLI."""
+from .degradation import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,7 +46,7 @@ from ..graph import Graph
 __all__ = ["demand_matrix", "ecmp_link_loads", "ecmp_all_pairs_loads",
            "walk_slack_link_loads", "directed_to_link_loads",
            "link_load_stats", "count_product", "padded_neighbors",
-           "sample_columns"]
+           "sample_columns", "mask_unreachable_demand"]
 
 
 def count_product(use_kernel: bool) -> Callable[[np.ndarray, np.ndarray],
@@ -109,6 +109,33 @@ def sample_columns(weights: np.ndarray, mask: np.ndarray,
     if bad.any():
         slot[bad] = mask[bad].argmax(axis=1)
     return slot
+
+
+def mask_unreachable_demand(demand: np.ndarray, dist: np.ndarray,
+                            renormalize: bool = False
+                            ) -> Tuple[np.ndarray, float]:
+    """The partitioned-graph demand contract, as one reusable helper.
+
+    Zeroes demand on diagonal and unreachable (``dist == inf``) pairs —
+    what every engine in this module does implicitly — and returns the
+    masked matrix together with the dropped *volume* fraction, so callers
+    report disconnection instead of silently under-routing. With
+    ``renormalize=True`` the surviving entries are rescaled to preserve
+    the original total volume (the degradation curves' "demand
+    renormalized over reachable pairs" convention). Accepts leading batch
+    axes as long as demand/dist broadcast together.
+    """
+    demand = np.asarray(demand, np.float64)
+    n = demand.shape[-1]
+    off = ~np.eye(n, dtype=bool)
+    total = float(np.where(off, demand, 0.0).sum())
+    ok = off & np.isfinite(dist)
+    masked = np.where(ok, demand, 0.0)
+    kept = float(masked.sum())
+    dropped_frac = 0.0 if total <= 0 else 1.0 - kept / total
+    if renormalize and kept > 0:
+        masked = masked * (total / kept)
+    return masked, dropped_frac
 
 
 def demand_matrix(g: Graph, pairs: np.ndarray,
@@ -176,6 +203,13 @@ def ecmp_all_pairs_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
                          product: Optional[Callable] = None,
                          use_kernel: bool = True, mesh=None) -> np.ndarray:
     """Directed ECMP link loads under *uniform all-pairs* demand, O(diameter).
+
+    Partitioned graphs are first-class: "uniform all-pairs" means 1.0 on
+    every *reachable* ordered pair — unreachable pairs (and dead routers'
+    rows/columns) contribute nothing to any load, never inf/NaN, because
+    every level mask below is gated on finite distance. The resilience
+    engine's failure batches lean on this: ``1 / loads.max()`` stays the
+    exact saturation-throughput bound for the surviving demand set.
 
     Specializing `ecmp_link_loads` to demand == 1 on every reachable pair
     admits Brandes-style backward dependency accumulation: with

@@ -23,6 +23,15 @@ Shipped models (the FatPaths/multipathing comparison set):
 * :class:`SlackRouting` — slack-limited non-minimal routing: spread each
   flow over the path classes at 0..k extra hops, class-weighted by the
   exact simple-path counts from `analysis.paths.path_counts_with_slack`.
+
+Partitioned-graph contract (shared by every model): demand on pairs with
+no path (``dist == inf``) is *dropped* — it contributes zero load and zero
+routed volume, never inf/NaN. :meth:`RoutingModel.disconnected_fraction`
+reports how much of a demand matrix falls in that bucket so callers can
+renormalize or flag it; `ValiantVLB` additionally restricts its random
+intermediates to the source's (equivalently, destination's) connected
+component, so on a partitioned graph reachable demand is still fully
+routed instead of silently leaking onto unreachable intermediates.
 """
 from __future__ import annotations
 
@@ -79,6 +88,24 @@ class RoutingModel:
         ok = np.isfinite(self.dist) & (self.dist > 0)
         return float(np.where(ok, demand, 0.0).sum())
 
+    def disconnected_fraction(self, demand: Optional[np.ndarray] = None
+                              ) -> float:
+        """Fraction of demand volume on pairs with no path.
+
+        That demand carries zero load in every model (the documented
+        partitioned-graph contract). With ``demand=None`` the fraction is
+        over all ordered off-diagonal pairs — the topology's disconnected-
+        pair fraction rather than a traffic-weighted one.
+        """
+        off = ~np.eye(len(self.dist), dtype=bool)
+        if demand is None:
+            demand = np.ones_like(self.dist)
+        vol = float(np.where(off, demand, 0.0).sum())
+        if vol <= 0:
+            return 0.0
+        dead = off & ~np.isfinite(self.dist)
+        return float(np.where(dead, demand, 0.0).sum() / vol)
+
     # -- optional API ------------------------------------------------------
 
     def next_hop_tensor(self, dests: Optional[Sequence[int]] = None
@@ -120,12 +147,19 @@ class UniformShortest(RoutingModel):
 class ValiantVLB(RoutingModel):
     """Valiant load balancing: two minimal stages via a random intermediate.
 
-    Each unit of (s, t) demand is split uniformly over all n intermediate
-    routers w and shipped s -> w -> t, each leg on uniform-shortest-path
-    (ECMP) routing. Legs with w = s or w = t are the degenerate zero-length
-    leg plus one minimal leg, matching the classic VLB description. Expected
-    loads are therefore ECMP loads of two derived demand matrices:
-    ``T1[s, w] = rowsum(T)[s] / n`` and ``T2[w, t] = colsum(T)[t] / n``.
+    Each unit of (s, t) demand is split uniformly over all intermediate
+    routers w *in the source's connected component* and shipped
+    s -> w -> t, each leg on uniform-shortest-path (ECMP) routing. Legs
+    with w = s or w = t are the degenerate zero-length leg plus one minimal
+    leg, matching the classic VLB description. Expected loads are therefore
+    ECMP loads of two derived demand matrices:
+    ``T1[s, w] = rowsum(T)[s] * reach[s, w] / |C(s)|`` and
+    ``T2[w, t] = colsum(T)[t] * reach[w, t] / |C(t)|`` (reach = finite
+    distance, |C(v)| = v's component size incl. itself). On a connected
+    graph this is exactly the classic ``rowsum / n`` spread; on a
+    partitioned one it keeps reachable demand fully routed — a uniform
+    intermediate over ALL n routers would silently drop the share of every
+    flow whose random waypoint landed in another component.
     """
 
     name = "valiant"
@@ -136,11 +170,15 @@ class ValiantVLB(RoutingModel):
         self.minimal = UniformShortest(g, dist, mult, use_kernel)
 
     def _legs(self, demand: np.ndarray):
-        n = self.g.n
         ok = np.isfinite(self.dist) & (self.dist > 0)
         dem = np.where(ok, demand, 0.0)
-        leg1 = np.repeat(dem.sum(axis=1, keepdims=True) / n, n, axis=1)
-        leg2 = np.repeat(dem.sum(axis=0, keepdims=True) / n, n, axis=0)
+        # component-aware uniform intermediates: reach[v, w] selects w in
+        # C(v), comp[v] = |C(v)|; connected graphs reduce to reach=1,
+        # comp=n — the classic all-routers spread, bit-for-bit
+        reach = np.isfinite(self.dist)
+        comp = reach.sum(axis=1, keepdims=True).astype(np.float64)
+        leg1 = dem.sum(axis=1, keepdims=True) * reach / comp
+        leg2 = (dem.sum(axis=0, keepdims=True).T * reach / comp).T
         return leg1, leg2
 
     def directed_link_loads(self, demand: np.ndarray) -> np.ndarray:

@@ -196,8 +196,19 @@ def max_concurrent_flow(
                           ``converged``)
       aggregate_throughput  lambda * total demand (bisection-style number)
       rounds, converged, commodities, dropped_unreachable
+      disconnected_fraction  dropped / requested commodities — the
+                          partitioned-graph contract: demand on pairs the
+                          first round's APSP proves unreachable is masked
+                          out and the bounds certify the REACHABLE
+                          remainder only
       link_loads          (E,) undirected loads of the scaled averaged flow
                           at lambda = throughput
+
+    Partitioned graphs are first-class: on a demand matrix whose pairs are
+    ALL unreachable the solver returns a defined zero result (throughput /
+    upper_bound / aggregate 0.0, commodities 0, disconnected_fraction 1.0,
+    zero link loads, converged True) instead of raising — only an empty
+    demand matrix (no off-diagonal entries at all) is a caller error.
     """
     if eps <= 0:
         raise ValueError("eps must be positive")
@@ -217,6 +228,7 @@ def max_concurrent_flow(
     amounts = demand[mask]
     if len(pairs) == 0:
         raise ValueError("demand matrix has no off-diagonal entries")
+    requested = len(pairs)
 
     rng = np.random.default_rng(seed)
     caps = np.full(m, float(capacity))
@@ -255,7 +267,22 @@ def max_concurrent_flow(
                 dropped = int((~reach).sum())
                 pairs, amounts = pairs[reach], amounts[reach]
                 if len(pairs) == 0:
-                    raise ValueError("no routable commodity in demand")
+                    # fully partitioned demand: nothing to route, nothing
+                    # to certify — the defined zero result, not an error
+                    mwu_sp.set(rounds=0, converged=True, throughput=0.0,
+                               disconnected=1.0)
+                    return {
+                        "throughput": 0.0,
+                        "upper_bound": 0.0,
+                        "gap": np.inf,
+                        "aggregate_throughput": 0.0,
+                        "rounds": 0,
+                        "converged": True,
+                        "commodities": 0,
+                        "dropped_unreachable": int(dropped),
+                        "disconnected_fraction": 1.0,
+                        "link_loads": np.zeros(len(g.edges)),
+                    }
 
             # LP-dual certificate for these lengths
             sp = dist_l[pairs[:, 0], pairs[:, 1]].astype(np.float64)
@@ -299,5 +326,6 @@ def max_concurrent_flow(
         "converged": bool(converged),
         "commodities": int(len(pairs)),
         "dropped_unreachable": int(dropped),
+        "disconnected_fraction": float(dropped / requested),
         "link_loads": link_loads,
     }

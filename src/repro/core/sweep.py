@@ -340,6 +340,10 @@ def sweep(families: Optional[Sequence[str]] = None,
                     "routers": n,
                     "servers": g.num_servers,
                     "radix": spec.router_radix if spec else g.radix,
+                    # partitioned-graph contract: every stat below covers
+                    # the reachable pairs; this column says how many that is
+                    "reachable_frac": (float(off.sum() / max(1, n * (n - 1)))
+                                       if n > 1 else 1.0),
                     "diameter": int(d[off].max()) if off.any() else 0,
                     "avg_spl": float(d[off].mean()) if off.any() else 0.0,
                     "mult_mean": float(m[off].mean()) if off.any() else 0.0,

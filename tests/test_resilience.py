@@ -1,0 +1,422 @@
+"""Resilience engine: failure invariants, degradation curves, graceful
+partitioned-graph contracts, and checkpoint/resume."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+from repro.core.analysis.apsp import apsp_dense
+from repro.core.analysis.distributed import tiled_summary
+from repro.core.analysis.metrics import analyze
+from repro.core.analysis.paths import shortest_path_multiplicity
+from repro.core.graph import Graph
+from repro.core.resilience import (TileCheckpoint, check_degradation,
+                                   degradation_curves, edge_class_labels,
+                                   evaluate_failure_batch, failure_batch,
+                                   failure_plan, format_degradation_table,
+                                   rate_to_k, source_fingerprint)
+from repro.core.resilience.degradation import main as resilience_main
+from repro.core.routing import throughput as R
+from repro.core.routing.assign import mask_unreachable_demand
+from repro.core.routing.models import UniformShortest, ValiantVLB
+from repro.core.sweep import equal_cost_graphs
+
+
+def _two_paths():
+    return Graph(n=6, edges=np.array([(0, 1), (1, 2), (3, 4), (4, 5)]),
+                 name="two-paths")
+
+
+# -- failure plans / masks ----------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["link", "router", "cable"])
+def test_failure_masks_symmetric_and_severity_nested(kind):
+    g = topo.by_servers("slimfly", 200)
+    plan = failure_plan(g, kind=kind, samples=6, seed=3, bundle_size=4)
+    prev = None
+    for k in (0, 1, 2, min(5, plan.n_units)):
+        b = failure_batch(plan, k)
+        # symmetry: every sample's adjacency stays an undirected graph
+        assert np.array_equal(b.adjacency,
+                              np.swapaxes(b.adjacency, 1, 2))
+        # each failed edge is zero in BOTH orientations
+        s, e = np.nonzero(b.edge_failed)
+        u, v = g.edges[e, 0], g.edges[e, 1]
+        assert (b.adjacency[s, u, v] == 0).all()
+        assert (b.adjacency[s, v, u] == 0).all()
+        # severity nesting: failures at k are a superset of k-1's
+        if prev is not None:
+            assert not (prev.edge_failed & ~b.edge_failed).any()
+        prev = b
+    b0 = failure_batch(plan, 0)
+    assert np.array_equal(b0.adjacency[0], g.adjacency_dense(np.float32))
+    assert b0.alive.all() and not b0.edge_failed.any()
+
+
+def test_router_failures_kill_incident_links():
+    g = topo.make("torus", dims=(3, 3))
+    plan = failure_plan(g, kind="router", samples=4, seed=0)
+    b = failure_batch(plan, 2)
+    for s in range(b.samples):
+        dead = np.flatnonzero(~b.alive[s])
+        assert len(dead) == 2
+        assert (b.adjacency[s][dead, :] == 0).all()
+        assert (b.adjacency[s][:, dead] == 0).all()
+        # exactly the edges touching a dead router fail
+        touches = (np.isin(g.edges[:, 0], dead)
+                   | np.isin(g.edges[:, 1], dead))
+        assert np.array_equal(b.edge_failed[s], touches)
+
+
+def test_cable_class_attribution_and_bundles():
+    g = topo.by_servers("slimfly", 200)
+    labels, names = edge_class_labels(g)
+    classes = g.link_classes()
+    assert len(labels) == len(g.edges)
+    counts = np.bincount(labels, minlength=len(classes))
+    assert [int(c) for c in counts] == [lc.count for lc in classes]
+    assert names == tuple(lc.name for lc in classes)
+    # correlated failures kill whole bundles, never a partial bundle
+    plan = failure_plan(g, kind="cable", samples=5, seed=1, bundle_size=4)
+    b = failure_batch(plan, 3)
+    sizes = np.diff(plan.unit_indptr)
+    for s in range(b.samples):
+        for unit in plan.order[s, :3]:
+            members = plan.unit_edge_ids[
+                plan.unit_indptr[unit]:plan.unit_indptr[unit + 1]]
+            assert b.edge_failed[s, members].all()
+        assert b.edge_failed[s].sum() == sizes[plan.order[s, :3]].sum()
+    # bundles never straddle a cable class
+    for unit in range(plan.n_units):
+        members = plan.unit_edge_ids[
+            plan.unit_indptr[unit]:plan.unit_indptr[unit + 1]]
+        assert len(set(labels[members])) == 1
+
+
+def test_cable_faults_without_spec_raise():
+    g = Graph(n=4, edges=np.array([(0, 1), (1, 2), (2, 3)]), name="bare")
+    with pytest.raises(KeyError):
+        failure_plan(g, kind="cable", samples=2)
+
+
+def test_rate_to_k_bounds():
+    g = topo.make("torus", dims=(3, 3))
+    plan = failure_plan(g, samples=2)
+    assert rate_to_k(plan, 0.0) == 0
+    assert rate_to_k(plan, 1.0) == plan.n_units
+    with pytest.raises(ValueError):
+        rate_to_k(plan, 1.5)
+
+
+# -- degradation metrics ------------------------------------------------------
+
+def test_zero_failure_bit_equal_to_baseline_all_families():
+    """The 0-failure batch through the stacked engine reproduces the
+    unfailed analysis bit-for-bit, for every equal-cost family."""
+    from repro.core.analysis.wavefront import wavefront_dist_mult
+
+    graphs, _ = equal_cost_graphs(max_routers=64)
+    assert len(graphs) == 12
+    for g in graphs:
+        plan = failure_plan(g, samples=2, seed=0)
+        b = failure_batch(plan, 0)
+        dist_b, mult_b = wavefront_dist_mult(b.adjacency)
+        dist_1, mult_1 = wavefront_dist_mult(g.adjacency_dense(np.float32))
+        for s in range(b.samples):
+            assert np.array_equal(dist_b[s], dist_1), g.name
+            assert np.array_equal(mult_b[s], mult_1), g.name
+
+
+def test_reachability_monotone_per_sample_throughput_in_aggregate():
+    """reachable_frac is non-increasing in failure count PER SAMPLE (the
+    severity-nested plans make k+1's failure set a superset of k's);
+    tput_lb is non-increasing up to a small rerouting tolerance — removing
+    a link also removes its disconnected pairs' demand, so exact per-sample
+    monotonicity is not a theorem, but the mean curve must degrade."""
+    g = topo.make("jellyfish", n=48, r=5, seed=2)
+    plan = failure_plan(g, kind="link", samples=24, seed=7)
+    prev = None
+    means = []
+    for k in (0, 1, 3, 6, 12, 25):
+        m = evaluate_failure_batch(g, failure_batch(plan, k),
+                                   use_kernel=False)
+        means.append(m["tput_lb"].mean())
+        if prev is not None:
+            assert (m["reachable_frac"]
+                    <= prev["reachable_frac"] + 1e-12).all()
+        prev = m
+    assert all(b <= a * 1.01 + 1e-12 for a, b in zip(means, means[1:]))
+    assert means[-1] < means[0]  # real degradation by 25 dead links
+
+
+def test_full_failure_defined_zero_metrics():
+    g = topo.make("torus", dims=(3, 3))
+    plan = failure_plan(g, kind="link", samples=3, seed=0)
+    m = evaluate_failure_batch(g, failure_batch(plan, plan.n_units),
+                               use_kernel=False)
+    assert (m["reachable_frac"] == 0.0).all()
+    assert (m["tput_lb"] == 0.0).all()
+    assert (m["diameter"] == 0.0).all()
+
+
+def test_evaluate_batch_kernel_matches_oracle_and_chunking():
+    g = topo.make("hypercube", dim=4)
+    plan = failure_plan(g, samples=6, seed=1)
+    b = failure_batch(plan, 4)
+    mk = evaluate_failure_batch(g, b, use_kernel=True, slack=True)
+    mo = evaluate_failure_batch(g, b, use_kernel=False, slack=True)
+    mc = evaluate_failure_batch(g, b, use_kernel=True, slack=True,
+                                mask_chunk=2)
+    for key in mk:
+        np.testing.assert_allclose(mk[key], mo[key], rtol=1e-5, err_msg=key)
+        np.testing.assert_array_equal(mk[key], mc[key], err_msg=key)
+
+
+def test_slack_counts_match_single_graph_engine():
+    from repro.core.analysis.paths import path_counts_with_slack
+
+    g = topo.make("torus", dims=(4, 4))
+    plan = failure_plan(g, samples=2, seed=0)
+    m = evaluate_failure_batch(g, failure_batch(plan, 0),
+                               use_kernel=False, slack=True)
+    dist = apsp_dense(g, use_kernel=False)
+    pc = path_counts_with_slack(g, dist, use_kernel=False)
+    off = np.isfinite(dist) & (dist > 0)
+    np.testing.assert_allclose(m["plus1_mean"][0], pc["plus1"][off].mean(),
+                               rtol=1e-6)
+    np.testing.assert_allclose(m["plus2_mean"][0], pc["plus2"][off].mean(),
+                               rtol=1e-6)
+
+
+# -- degradation curves + CLI -------------------------------------------------
+
+def _small_curves(**kw):
+    kw.setdefault("families", ["hypercube", "torus"])
+    kw.setdefault("max_routers", 32)
+    kw.setdefault("rates", (0.0, 0.05, 0.15))
+    kw.setdefault("samples", 8)
+    kw.setdefault("bootstrap", 50)
+    kw.setdefault("use_kernel", False)
+    return degradation_curves(**kw)
+
+
+def test_degradation_curves_schema_and_gate():
+    result = _small_curves()
+    assert [f["family"] for f in result["families"]] is not None
+    assert check_degradation(result) == []
+    table = format_degradation_table(result)
+    for fam in result["families"]:
+        assert fam["family"] in table
+        assert len(fam["points"]) == 3
+    # the gate actually fires on a broken artifact
+    bad = json.loads(json.dumps(result))
+    bad["families"][0]["points"][-1]["metrics"]["reachable_frac"]["value"] = 2.0
+    assert any("reachable_frac" in msg for msg in check_degradation(bad))
+
+
+def test_degradation_curves_cable_kind_skips_specless():
+    g = topo.make("torus", dims=(3, 3))
+    bare = Graph(n=4, edges=np.array([(0, 1), (1, 2), (2, 3), (3, 0)]),
+                 name="bare-ring")
+    result = degradation_curves(graphs=[g, bare], kind="cable",
+                                rates=(0.0, 0.2), samples=4, bootstrap=20,
+                                use_kernel=False, slack=False)
+    assert [f["family"] for f in result["families"]] == ["torus"]
+
+
+def test_resilience_cli_smoke(tmp_path):
+    rc = resilience_main([
+        "--families", "hypercube", "--max-routers", "32",
+        "--rates", "0,0.1", "--samples", "6", "--bootstrap", "20",
+        "--no-kernel", "--no-slack", "--out", str(tmp_path), "--check"])
+    assert rc == 0
+    art = json.loads((tmp_path / "degradation.json").read_text())
+    assert check_degradation(art) == []
+    assert (tmp_path / "degradation.txt").read_text().startswith(
+        "degradation sweep:")
+
+
+@pytest.mark.slow
+def test_degradation_full_family_bootstrap_sweep():
+    """The full 12-family bootstrap sweep (soak job): every family gets a
+    complete, gate-clean degradation curve at equal cost."""
+    result = degradation_curves(max_routers=128, rates=(0.0, 0.02, 0.05),
+                                samples=100, bootstrap=200)
+    assert len(result["families"]) == 12
+    assert check_degradation(result) == []
+    for fam in result["families"]:
+        pt = fam["points"][-1]
+        assert pt["samples"] == 100
+        ci = pt["metrics"]["tput_lb"]["ci95"]
+        assert ci[0] <= pt["metrics"]["tput_lb"]["value"] <= ci[1]
+
+
+# -- graceful partitioned-graph contracts -------------------------------------
+
+def test_mwu_fully_disconnected_returns_zero_result():
+    g = _two_paths()
+    demand = np.zeros((6, 6))
+    demand[0, 3] = demand[3, 0] = 1.0  # both pairs cross the cut
+    res = R.max_concurrent_flow(g, demand, use_kernel=False)
+    assert res["throughput"] == 0.0
+    assert res["upper_bound"] == 0.0
+    assert res["commodities"] == 0
+    assert res["dropped_unreachable"] == 2
+    assert res["disconnected_fraction"] == 1.0
+    assert res["converged"] is True
+    assert np.array_equal(res["link_loads"], np.zeros(len(g.edges)))
+
+
+def test_mwu_reports_disconnected_fraction():
+    g = _two_paths()
+    demand = np.zeros((6, 6))
+    demand[0, 2] = demand[0, 3] = demand[0, 4] = 1.0
+    res = R.max_concurrent_flow(g, demand, eps=0.2, use_kernel=False)
+    assert res["dropped_unreachable"] == 2
+    assert res["disconnected_fraction"] == pytest.approx(2 / 3)
+    assert res["throughput"] == pytest.approx(1.0)
+
+
+def test_mask_unreachable_demand_contract():
+    g = _two_paths()
+    dist = apsp_dense(g, use_kernel=False)
+    demand = np.ones((6, 6))
+    masked, frac = mask_unreachable_demand(demand, dist)
+    # 6x6 minus diagonal = 30 requested; 2 components of 3 -> 12 reachable
+    assert frac == pytest.approx(18 / 30)
+    assert masked.sum() == pytest.approx(12.0)
+    renorm, frac2 = mask_unreachable_demand(demand, dist, renormalize=True)
+    assert frac2 == frac
+    assert renorm.sum() == pytest.approx(30.0)
+    assert (renorm[~np.isfinite(dist)] == 0).all()
+
+
+def test_vlb_component_aware_routes_full_reachable_demand():
+    g = _two_paths()
+    dist = apsp_dense(g, use_kernel=False)
+    _, mult = shortest_path_multiplicity(g, dist, use_kernel=False)
+    demand = np.zeros((6, 6))
+    demand[0, 2] = 2.0   # reachable inside component {0,1,2}
+    demand[3, 5] = 1.0   # reachable inside component {3,4,5}
+    demand[0, 5] = 4.0   # cross-cut: dropped by contract
+    vlb = ValiantVLB(g, dist, mult, use_kernel=False)
+    leg1, leg2 = vlb._legs(demand)
+    # every unit of reachable demand is fully spread over ITS component
+    assert leg1.sum() == pytest.approx(3.0)
+    assert leg2.sum() == pytest.approx(3.0)
+    reach = np.isfinite(dist)
+    assert (leg1[~reach] == 0).all() and (leg2[~reach] == 0).all()
+    assert vlb.disconnected_fraction(demand) == pytest.approx(4 / 7)
+    # path graph 0-1-2: each leg averages 1 hop over intermediates
+    # {0,1,2} -> VLB expected hops = 2 per unit; loads conserve demand
+    loads = vlb.directed_link_loads(demand)
+    assert loads.sum() == pytest.approx(2 * 3.0)
+
+
+def test_uniform_shortest_drops_unreachable_without_nan():
+    g = _two_paths()
+    dist = apsp_dense(g, use_kernel=False)
+    _, mult = shortest_path_multiplicity(g, dist, use_kernel=False)
+    model = UniformShortest(g, dist, mult, use_kernel=False)
+    demand = np.ones((6, 6))
+    loads = model.directed_link_loads(demand)
+    assert np.isfinite(loads).all()
+    assert model.disconnected_fraction() == pytest.approx(18 / 30)
+
+
+def test_analysis_report_disconnected_pair_fraction():
+    rep = analyze(_two_paths(), use_kernel=False)
+    assert rep["disconnected_pair_fraction"] == pytest.approx(18 / 30)
+    rep2 = analyze(topo.make("torus", dims=(3, 3)), use_kernel=False)
+    assert rep2["disconnected_pair_fraction"] == 0.0
+
+
+def test_sweep_rows_report_reachable_frac():
+    from repro.core.sweep import sweep
+
+    result = sweep(["hypercube"], max_routers=32, use_kernel=False,
+                   throughput=False, mesh=None)
+    assert result["rows"][0]["reachable_frac"] == 1.0
+
+
+# -- checkpoint / resume ------------------------------------------------------
+
+class _InjectedKill(Exception):
+    pass
+
+
+def test_tiled_checkpoint_kill_and_resume_bit_identical(tmp_path):
+    g = topo.make("jellyfish", n=300, r=6, seed=1)
+    clean = tiled_summary(g, tile_rows=64)
+    ck = tmp_path / "run.ckpt.json"
+
+    seen = [0]
+
+    def killer(r0, r1, d, m):
+        seen[0] += 1
+        if seen[0] == 3:
+            raise _InjectedKill
+
+    with pytest.raises(_InjectedKill):
+        tiled_summary(g, tile_rows=64, on_tile=killer, checkpoint=str(ck))
+    assert ck.exists()
+    state = json.loads(ck.read_text())["state"]
+    assert state["tiles"] == 2 and state["rows_done"] == 128
+
+    resumed_tiles = []
+    resumed = tiled_summary(
+        g, tile_rows=64, checkpoint=str(ck),
+        on_tile=lambda r0, r1, d, m: resumed_tiles.append((r0, r1)))
+    # only the incomplete tiles are recomputed, from the right offset
+    assert resumed_tiles[0][0] == 128
+    assert not ck.exists()  # completed run cleans up
+    for key in ("diameter", "reached_pairs", "avg_spl", "mult_mean",
+                "mult_min", "mult_max", "rows_analyzed", "tiles"):
+        assert clean[key] == resumed[key], key
+
+
+def test_checkpoint_fingerprint_mismatch_raises(tmp_path):
+    g = topo.make("jellyfish", n=200, r=5, seed=0)
+    other = topo.make("jellyfish", n=200, r=5, seed=9)
+    ck = TileCheckpoint(tmp_path / "ck.json")
+    fp = source_fingerprint(g, 64, False)
+    ck.save(fp, {"rows_done": 64})
+    assert ck.load(fp) == {"rows_done": 64}
+    with pytest.raises(ValueError):
+        ck.load(source_fingerprint(other, 64, False))
+    with pytest.raises(ValueError):
+        ck.load(source_fingerprint(g, 32, False))  # different tiling
+    ck.remove()
+    assert ck.load(fp) is None  # missing file = fresh start
+
+
+def test_checkpoint_save_is_atomic_no_temp_left(tmp_path):
+    ck = TileCheckpoint(tmp_path / "a" / "ck.json")
+    fp = {"routers": 10}
+    for i in range(3):
+        ck.save(fp, {"rows_done": i})
+    files = list((tmp_path / "a").iterdir())
+    assert [f.name for f in files] == ["ck.json"]
+    assert ck.load(fp) == {"rows_done": 2}
+
+
+def test_checkpoint_resume_with_source_ids(tmp_path):
+    g = topo.make("jellyfish", n=150, r=5, seed=3)
+    ids = np.array([3, 9, 17, 40, 77, 99, 120, 149])
+    clean = tiled_summary(g, tile_rows=3, source_ids=ids)
+    ck = tmp_path / "ck.json"
+    count = [0]
+
+    def killer(r0, r1, d, m):
+        count[0] += 1
+        if count[0] == 2:
+            raise _InjectedKill
+
+    with pytest.raises(_InjectedKill):
+        tiled_summary(g, tile_rows=3, source_ids=ids, on_tile=killer,
+                      checkpoint=str(ck))
+    resumed = tiled_summary(g, tile_rows=3, source_ids=ids,
+                            checkpoint=str(ck))
+    for key in ("reached_pairs", "avg_spl", "mult_mean", "rows_analyzed"):
+        assert clean[key] == resumed[key], key
