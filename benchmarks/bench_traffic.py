@@ -1,0 +1,113 @@
+"""Traffic bench: one batched scenario pass vs the per-matrix Python loop.
+
+The acceptance row for the batched traffic engine: hundreds of demand
+matrices per scenario evaluated in ONE stacked demand-weighted Brandes
+pass (`evaluate_traffic_batch` over `ecmp_demand_loads`) must beat the
+naive per-matrix loop — route each matrix through the single-matrix
+exact engine (`ecmp_link_loads`, the pre-existing expected-load path of
+`evaluate_workload`) and reduce its stats — by at least 5x. The win is
+algorithmic, not just amortization: the stacked pass runs O(diameter)
+fused GEMM levels per batch while the per-pair engine runs O(diameter^2)
+level pairs per matrix, so the gap widens with diameter — hence the
+torus workload, where diameter is meaningful (a diameter-3 jellyfish
+leaves the per-pair engine too little to lose). The loop is timed on a
+matrix subsample and reported per-matrix; the stacked pass is timed end
+to end over the full batch, so the speedup column compares amortized
+per-matrix cost on both sides. The `>=5x` gate is a hard assert (skipped
+under --quick, like the analyze gate) so CI fails if the stacked path
+ever degenerates into a hidden per-sample loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.analysis.wavefront import wavefront_dist_mult
+from repro.core.graph import Graph
+from repro.core.routing.assign import ecmp_link_loads
+from repro.core.traffic import TrafficSpec, evaluate_traffic_batch
+
+#: minimum amortized speedup of the stacked scenario pass over the
+#: per-matrix loop (the acceptance criterion for the traffic engine)
+MIN_SPEEDUP = 5.0
+
+
+def _naive_per_matrix(g: Graph, dist: np.ndarray, mult: np.ndarray,
+                      demand: np.ndarray) -> dict:
+    """One matrix through the single-matrix engine — the loop body the
+    stacked demand-weighted pass replaces."""
+    loads = ecmp_link_loads(g, dist, mult, demand, use_kernel=False,
+                            directed=True)
+    pos = loads > 0
+    peak = float(loads.max())
+    return {
+        "max_link_load": peak,
+        "tput_lb": 1.0 / peak if peak > 0 else 0.0,
+        "p99_link_load": float(np.percentile(loads[pos], 99))
+        if pos.any() else 0.0,
+    }
+
+
+def scenario_pass(quick: bool = False) -> dict:
+    """Time one full scenario batch vs the per-matrix loop; return the row."""
+    g = (T.make("hypercube", dim=6) if quick
+         else T.make("torus", dims=(16, 16)))
+    samples = 100 if quick else 200
+    loop_matrices = 5 if quick else 8
+    spec = TrafficSpec(pattern="hotspot", samples=samples, seed=0,
+                       params={"zipf_a": 1.4})
+    batch = spec.batch(g)
+    dist, mult = wavefront_dist_mult(g.adjacency_dense())
+    mult = mult.astype(np.float64)
+
+    t0 = time.perf_counter()
+    metrics = evaluate_traffic_batch(g, batch, dist=dist, mult=mult,
+                                     use_kernel=False)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for s in range(loop_matrices):
+        _naive_per_matrix(g, dist, mult, batch[s])
+    t_loop = time.perf_counter() - t0
+
+    per_matrix_batched = t_batched / samples
+    per_matrix_loop = t_loop / loop_matrices
+    row = {
+        "family": g.name, "routers": g.n, "scenario": spec.describe(),
+        "samples": samples, "loop_matrices": loop_matrices,
+        "batched_ms": round(t_batched * 1e3, 1),
+        "batched_per_matrix_ms": round(per_matrix_batched * 1e3, 3),
+        "loop_per_matrix_ms": round(per_matrix_loop * 1e3, 3),
+        "speedup": round(per_matrix_loop / per_matrix_batched, 2),
+        "mean_max_link_load": round(float(metrics["max_link_load"].mean()),
+                                    5),
+        "mean_tput_lb": round(float(metrics["tput_lb"].mean()), 5),
+    }
+    # hard acceptance gate: a regression here means the stacked pass has
+    # re-grown a per-matrix loop somewhere in the scenario stack
+    if not quick:
+        assert row["speedup"] >= MIN_SPEEDUP, row
+    return row
+
+
+def run(quick: bool = False) -> List[dict]:
+    return [scenario_pass(quick)]
+
+
+def baseline_section(quick: bool = False) -> dict:
+    """The traffic row of the perf-trajectory baseline artifact."""
+    return scenario_pass(quick)
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 """Benchmark harness — one bench per paper table/figure.
 
   python -m benchmarks.run [--quick] [--only generation,analysis,...]
-  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_9.json
+  python -m benchmarks.run --baseline   # perf-trajectory -> BENCH_10.json
   python -m benchmarks.run --baseline --gate BENCH_5.json   # CI perf gate
 
   generation   Table-1 analogue: 10k/100k/1M-server generation scalability
@@ -10,13 +10,15 @@
   kernels      Pallas kernel sweep + VMEM working sets
   roofline     the 40-cell dry-run roofline table (reads experiments/dryrun)
   resilience   batched failure-sweep severity pass vs the per-mask loop
+  traffic      batched traffic-scenario pass vs the per-matrix loop
 
 ``--baseline`` runs the headline device-resident-vs-host-loop comparison
-(`bench_analysis.baseline`) and writes the repo-root ``BENCH_9.json``
+(`bench_analysis.baseline`) and writes the repo-root ``BENCH_10.json``
 trajectory artifact (single-graph analyze, sweep chain, throughput rounds,
-packed/estimator trajectory, batched failure-sweep severity pass,
-with speedups over the host-looped reference) that CI uploads per run, so
-future PRs have a fixed-size perf trajectory to compare against.
+packed/estimator trajectory, batched failure-sweep severity pass, batched
+traffic-scenario pass, with speedups over the host-looped reference) that
+CI uploads per run, so future PRs have a fixed-size perf trajectory to
+compare against.
 
 ``--gate REF.json`` is the perf-trajectory regression gate: every
 ``*speedup`` column present in BOTH the fresh baseline and the reference
@@ -34,7 +36,8 @@ import sys
 import time
 
 from . import (bench_analysis, bench_collectives, bench_generation,
-               bench_kernels, bench_resilience, bench_roofline)
+               bench_kernels, bench_resilience, bench_roofline,
+               bench_traffic)
 
 BENCHES = {
     "generation": bench_generation,
@@ -43,13 +46,14 @@ BENCHES = {
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "resilience": bench_resilience,
+    "traffic": bench_traffic,
 }
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 #: this PR sequence's baseline artifact (previous PRs' files stay committed
 #: at the repo root, giving the trajectory its history)
-BASELINE_NAME = "BENCH_9.json"
+BASELINE_NAME = "BENCH_10.json"
 
 #: a shared speedup column may lose at most this fraction vs the reference
 GATE_TOLERANCE = 0.30
@@ -170,6 +174,8 @@ def main() -> None:
         obs.enable()
         summary = bench_analysis.baseline(quick=args.quick)
         summary["resilience"] = bench_resilience.baseline_section(
+            quick=args.quick)
+        summary["traffic"] = bench_traffic.baseline_section(
             quick=args.quick)
         summary["tier"] = "perf-trajectory"
         summary["meta"] = run_metadata()

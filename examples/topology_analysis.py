@@ -104,6 +104,7 @@ if "--trace" in sys.argv:
 
 from repro.core import routing as R, topology as T, workload as W
 from repro.core.analysis import AnalysisEngine
+from repro.core.traffic import TrafficSpec
 from repro.core.collectives import (
     PhysicalFabric, plan_mesh_mapping, pod_traffic_report,
 )
@@ -120,7 +121,10 @@ for fam in FAMILIES:
     eng = AnalysisEngine(g)
     rep = eng.report()  # all stages share the engine's one APSP result
     mult = eng.multiplicities()["multiplicity"]
-    wl = W.make_traffic(g, "permutation", flows=2048)
+    # demand comes from the unified spec language; the Workload container
+    # carries the sampled flow pairs through the path-sampling evaluator
+    spec = TrafficSpec.parse("permutation:flows=2048")
+    wl = W.Workload(pairs=spec.pairs(g), name=spec.describe())
     tr = W.evaluate_workload(g, wl, dist=eng.distances(), mult=mult)
     demand = wl.demand_matrix(g)
     # f64 BLAS path for the model columns: the walkthrough favours turnaround;

@@ -2,7 +2,9 @@
 
 The paper's primary contribution, in JAX: `topology` (generators),
 `analysis` (metrics), `collectives` (topology-aware cost models feeding the
-framework's sharding planner and roofline), `workload` (traffic matrices).
+framework's sharding planner and roofline), `traffic` (the unified demand
+language + batched scenario engines), `workload` (flow-pairs sampling).
 """
-from . import analysis, collectives, routing, topology, workload  # noqa: F401
+from . import (analysis, collectives, routing, topology,  # noqa: F401
+               traffic, workload)
 from .graph import Graph  # noqa: F401

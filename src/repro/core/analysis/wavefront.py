@@ -360,7 +360,8 @@ def wavefront_dist_mult(adj: np.ndarray, block: Optional[int] = None,
 
 
 @functools.lru_cache(maxsize=None)
-def _ecmp_fn(batched: bool, block: int, interpret: bool):
+def _ecmp_fn(batched: bool, block: int, interpret: bool,
+             weighted: bool = False):
     from ... import kernels
     from ...kernels.semiring import (COUNTING, semiring_matmul_batched_pallas,
                                      semiring_matmul_pallas)
@@ -372,7 +373,7 @@ def _ecmp_fn(batched: bool, block: int, interpret: bool):
                     interpret=interpret)
         return out
 
-    def run(dist, mult, adj):
+    def accumulate(dist, mult, adj, w):
         finite = jnp.isfinite(dist)
         diam = jnp.max(jnp.where(finite, dist, 0.0)).astype(jnp.int32)
         sigma_inv = jnp.where(finite & (mult > 0),
@@ -386,7 +387,7 @@ def _ecmp_fn(batched: bool, block: int, interpret: bool):
         def body(state):
             a, delta, acc = state
             af = a.astype(jnp.float32)
-            z = jnp.where(dist == af + 1.0, (1.0 + delta) * sigma_inv, 0.0)
+            z = jnp.where(dist == af + 1.0, (w + delta) * sigma_inv, 0.0)
             f_a = jnp.where(dist == af, mult, 0.0)
             acc = acc + count(jnp.swapaxes(f_a, -1, -2), z)
             delta = jnp.where(dist == af, mult * count(z, adj), delta)
@@ -395,25 +396,43 @@ def _ecmp_fn(batched: bool, block: int, interpret: bool):
         _, _, acc = jax.lax.while_loop(cond, body, (diam - 1, zeros, zeros))
         return adj * acc
 
+    if weighted:
+        def run_weighted(dist, mult, adj, demand):
+            return accumulate(dist, mult, adj, demand)
+
+        return jax.jit(run_weighted)
+
+    def run(dist, mult, adj):
+        return accumulate(dist, mult, adj, 1.0)
+
     return jax.jit(run)
 
 
 def ecmp_loads_device(dist: jnp.ndarray, mult: jnp.ndarray, adj: jnp.ndarray,
+                      demand: Optional[jnp.ndarray] = None,
                       block: Optional[int] = None,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Directed ECMP loads under uniform all-pairs demand, fully on device.
+    """Directed ECMP loads, fully on device: uniform or weighted demand.
 
     The O(diameter) Brandes backward accumulation of
     `routing.assign.ecmp_all_pairs_loads` as one jitted `lax.while_loop` —
     2 counting products per level with the level masks evaluated on device.
-    Operands must share a (.., p, p) block-multiple shape (phantom padding:
-    dist +inf rows, mult/adj 0). Returns the device (.., p, p) load matrix.
+    With ``demand=None`` every reachable pair carries 1.0 (the all-pairs
+    case); a (.., p, p) ``demand`` operand seeds the recurrence with that
+    pair's volume instead, which is the whole batched-traffic engine
+    (`routing.assign.ecmp_demand_loads`): diagonal and unreachable demand
+    never enters the level sets, so it is dropped, not routed. Operands
+    must share a (.., p, p) block-multiple shape (phantom padding: dist
+    +inf rows, mult/adj/demand 0). Returns the device (.., p, p) loads.
     """
     if interpret is None:
         interpret = _interpret_default()
     p = dist.shape[-1]
     block = _fit_block(p, block, batched=dist.ndim == 3)
-    return _ecmp_fn(dist.ndim == 3, block, interpret)(dist, mult, adj)
+    if demand is None:
+        return _ecmp_fn(dist.ndim == 3, block, interpret)(dist, mult, adj)
+    return _ecmp_fn(dist.ndim == 3, block, interpret,
+                    weighted=True)(dist, mult, adj, demand)
 
 
 @functools.lru_cache(maxsize=None)

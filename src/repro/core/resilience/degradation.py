@@ -36,7 +36,7 @@ CLI::
 
   python -m repro.core.resilience [--families a,b,...] [--rates 0,0.02,...]
       [--samples N] [--kind link|router|cable] [--max-routers N]
-      [--out DIR] [--check] [--trace OUT.json]
+      [--traffic SPEC] [--out DIR] [--check] [--trace OUT.json]
 """
 from __future__ import annotations
 
@@ -139,9 +139,16 @@ def _batched_slack_means(adj: np.ndarray, dist: np.ndarray,
     }
 
 
-def _eval_stack(adj: np.ndarray, n: int, use_kernel: bool, slack: bool
-                ) -> Dict[str, np.ndarray]:
-    """One stacked device pass over a (C, n, n) adjacency batch."""
+def _eval_stack(adj: np.ndarray, n: int, use_kernel: bool, slack: bool,
+                demand: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+    """One stacked device pass over a (C, n, n) adjacency batch.
+
+    ``demand=None`` is the legacy convention: uniform demand over the
+    reachable pairs. A ``(1|C, n, n)`` demand stack instead routes that
+    volume (mask ``i`` pairs with demand sample ``i``; a single matrix
+    broadcasts) via `routing.assign.ecmp_demand_loads` and adds the
+    ``dropped_demand_frac`` metric per the `core.traffic.spec` contract.
+    """
     if use_kernel:
         from ..analysis.wavefront import wavefront_dist_mult
 
@@ -151,16 +158,30 @@ def _eval_stack(adj: np.ndarray, n: int, use_kernel: bool, slack: bool
         from ..sweep import _batched_count, batched_dist_mult
 
         dist, mult = batched_dist_mult(adj, _batched_count(False))
-    from ..routing.assign import ecmp_all_pairs_loads
-
-    loads = ecmp_all_pairs_loads(dist, mult, adj, use_kernel=use_kernel)
     s = len(adj)
     off = np.isfinite(dist) & (dist > 0)
     cnt = off.reshape(s, -1).sum(1)
     reach_frac = cnt / max(n * (n - 1), 1)
-    peak = loads.reshape(s, -1).max(1)
-    tput = np.where((cnt > 0) & (peak > 0), 1.0 / np.maximum(peak, 1e-300),
-                    0.0)
+    if demand is None:
+        from ..routing.assign import ecmp_all_pairs_loads
+
+        loads = ecmp_all_pairs_loads(dist, mult, adj, use_kernel=use_kernel)
+        peak = loads.reshape(s, -1).max(1)
+        tput = np.where((cnt > 0) & (peak > 0),
+                        1.0 / np.maximum(peak, 1e-300), 0.0)
+        dropped = None
+    else:
+        from ..routing.assign import ecmp_demand_loads
+
+        loads = ecmp_demand_loads(dist, mult, adj.astype(np.float64),
+                                  demand, use_kernel=use_kernel)
+        routed = np.where(off, demand, 0.0).reshape(s, -1).sum(1)
+        total = np.broadcast_to(demand, (s, n, n)).reshape(s, -1).sum(1)
+        dropped = np.where(total > 0,
+                           1.0 - routed / np.maximum(total, 1e-300), 0.0)
+        peak = loads.reshape(s, -1).max(1)
+        tput = np.where((routed > 0) & (peak > 0),
+                        1.0 / np.maximum(peak, 1e-300), 0.0)
     diam = np.where(off, dist, -np.inf).reshape(s, -1).max(1)
     p10, p50, p90 = _masked_percentiles(mult, off, (0.1, 0.5, 0.9))
     out = {
@@ -174,6 +195,8 @@ def _eval_stack(adj: np.ndarray, n: int, use_kernel: bool, slack: bool
         "mult_p90": p90,
         "frac_multipath": _masked_mean((mult > 1).astype(np.float64), off),
     }
+    if dropped is not None:
+        out["dropped_demand_frac"] = dropped
     if slack:
         out.update(_batched_slack_means(adj.astype(np.float32), dist, mult,
                                         off, use_kernel))
@@ -182,8 +205,8 @@ def _eval_stack(adj: np.ndarray, n: int, use_kernel: bool, slack: bool
 
 def evaluate_failure_batch(g: Graph, batch, use_kernel: bool = True,
                            slack: bool = False,
-                           mask_chunk: Optional[int] = None
-                           ) -> Dict[str, np.ndarray]:
+                           mask_chunk: Optional[int] = None,
+                           demand=None) -> Dict[str, np.ndarray]:
     """Per-sample degradation metrics for one severity's failure batch.
 
     Returns ``{metric: (S,) array}`` for the module's METRICS (plus
@@ -191,9 +214,23 @@ def evaluate_failure_batch(g: Graph, batch, use_kernel: bool = True,
     device passes of at most ``mask_chunk`` masks (auto-sized from a
     1 GiB working-set budget when None) — the only Python loop is over
     chunks, never over masks.
+
+    ``demand`` (default None = uniform over the reachable pairs) accepts
+    a `core.traffic.TrafficSpec`, a spec string, one ``(n, n)`` matrix
+    (broadcast across every mask — the clean monotonicity convention), or
+    an ``(S, n, n)`` stack pairing demand sample ``i`` with failure mask
+    ``i``; adds the ``dropped_demand_frac`` metric.
     """
     s = batch.samples
     n = g.n
+    dem = None
+    if demand is not None:
+        from ..traffic.scenarios import demand_batch
+
+        dem, _ = demand_batch(g, demand)
+        if len(dem) not in (1, s):
+            raise ValueError(f"{len(dem)} demand samples cannot pair with "
+                             f"{s} failure masks")
     if mask_chunk is None:
         mask_chunk = _auto_chunk(n, s)
     parts: List[Dict[str, np.ndarray]] = []
@@ -201,8 +238,10 @@ def evaluate_failure_batch(g: Graph, batch, use_kernel: bool = True,
                   k=batch.k, samples=s, routers=n,
                   mask_chunk=mask_chunk) as sp:
         for lo in range(0, s, mask_chunk):
+            d = None if dem is None else (
+                dem if len(dem) == 1 else dem[lo:lo + mask_chunk])
             parts.append(_eval_stack(batch.adjacency[lo:lo + mask_chunk],
-                                     n, use_kernel, slack))
+                                     n, use_kernel, slack, demand=d))
         out = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
         disc = float(1.0 - out["reachable_frac"].mean())
         sp.set(disconnected_frac=disc, passes=len(parts))
@@ -230,7 +269,7 @@ def degradation_curves(
         samples: int = 1000, kind: str = "link", bundle_size: int = 8,
         seed: int = 0, use_kernel: bool = True, slack: bool = True,
         mask_chunk: Optional[int] = None, bootstrap: int = 1000,
-        graphs: Optional[Sequence[Graph]] = None) -> Dict:
+        graphs: Optional[Sequence[Graph]] = None, demand=None) -> Dict:
     """Degradation curves across the equal-cost family set.
 
     For each family (instantiated at matched cost like `core.sweep.sweep`;
@@ -241,11 +280,23 @@ def degradation_curves(
     a single-mask batch and doubles as the bit-equality anchor against the
     unfailed baseline. Families without a TopologySpec are skipped for
     ``kind="cable"`` (no link inventory to attribute).
+
+    ``demand`` (default None = uniform over the reachable pairs) accepts a
+    `core.traffic.TrafficSpec` or spec string (``--traffic`` on the CLI):
+    the spec's sample-0 matrix is materialized per family and broadcast
+    across every failure mask, so the curves answer "how does THIS traffic
+    degrade" under one fixed scenario.
     """
     from ..sweep import equal_cost_graphs
 
     t0 = time.time()
     rates = sorted(float(r) for r in rates)
+    traffic_label = None
+    if demand is not None and not isinstance(demand, np.ndarray):
+        from ..traffic.spec import as_spec
+
+        demand = as_spec(demand)
+        traffic_label = demand.describe()
     with obs.span("resilience.curves", cat="resilience", kind=kind,
                   samples=samples, rates=len(rates)) as root:
         if graphs is None:
@@ -266,6 +317,8 @@ def degradation_curves(
                 continue
             with obs.span("resilience.family", cat="resilience", family=fam,
                           routers=g.n, units=plan.n_units):
+                dem_g = demand if demand is None or \
+                    isinstance(demand, np.ndarray) else demand.matrix(g)
                 # k=0 masks are all identical: evaluate ONE, so the rate-0
                 # point is bit-equal to the unfailed baseline by
                 # construction (a mean over S identical floats is not)
@@ -275,7 +328,7 @@ def degradation_curves(
                     edge_failed=b0.edge_failed[:1])
                 base = evaluate_failure_batch(
                     g, b0, use_kernel=use_kernel,
-                    slack=slack, mask_chunk=mask_chunk)
+                    slack=slack, mask_chunk=mask_chunk, demand=dem_g)
                 baseline = {k: float(v[0]) for k, v in sorted(base.items())}
                 points = []
                 for rate in rates:
@@ -286,7 +339,7 @@ def degradation_curves(
                         vals = evaluate_failure_batch(
                             g, failure_batch(plan, k),
                             use_kernel=use_kernel, slack=slack,
-                            mask_chunk=mask_chunk)
+                            mask_chunk=mask_chunk, demand=dem_g)
                     points.append({
                         "rate": rate,
                         "k": k,
@@ -306,6 +359,7 @@ def degradation_curves(
         "rates": list(rates),
         "samples": samples,
         "bundle_size": bundle_size if kind == "cable" else None,
+        "traffic": traffic_label,
         "seed": seed,
         "budget": budget,
         "use_kernel": use_kernel,
@@ -446,6 +500,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--bundle-size", type=int, default=8,
                     help="cable kind: correlated edges per bundle")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--traffic", default=None,
+                    help="TrafficSpec flag grammar (e.g. "
+                         "'hotspot:zipf_a=1.4'): degrade THIS demand "
+                         "instead of uniform-over-reachable-pairs")
     ap.add_argument("--no-kernel", action="store_true",
                     help="numpy/jnp oracle products instead of Pallas")
     ap.add_argument("--no-slack", action="store_true",
@@ -474,7 +532,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         max_routers=args.max_routers, rates=rates, samples=args.samples,
         kind=args.kind, bundle_size=args.bundle_size, seed=args.seed,
         use_kernel=not args.no_kernel, slack=not args.no_slack,
-        mask_chunk=args.mask_chunk, bootstrap=args.bootstrap)
+        mask_chunk=args.mask_chunk, bootstrap=args.bootstrap,
+        demand=args.traffic)
     table = format_degradation_table(result)
     print(table)
     if args.out:

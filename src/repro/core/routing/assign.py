@@ -44,9 +44,9 @@ import numpy as np
 from ..graph import Graph
 
 __all__ = ["demand_matrix", "ecmp_link_loads", "ecmp_all_pairs_loads",
-           "walk_slack_link_loads", "directed_to_link_loads",
-           "link_load_stats", "count_product", "padded_neighbors",
-           "sample_columns", "mask_unreachable_demand"]
+           "ecmp_demand_loads", "walk_slack_link_loads",
+           "directed_to_link_loads", "link_load_stats", "count_product",
+           "padded_neighbors", "sample_columns", "mask_unreachable_demand"]
 
 
 def count_product(use_kernel: bool) -> Callable[[np.ndarray, np.ndarray],
@@ -114,7 +114,7 @@ def sample_columns(weights: np.ndarray, mask: np.ndarray,
 def mask_unreachable_demand(demand: np.ndarray, dist: np.ndarray,
                             renormalize: bool = False
                             ) -> Tuple[np.ndarray, float]:
-    """The partitioned-graph demand contract, as one reusable helper.
+    """The partitioned-graph demand helper (contract: `traffic.spec`).
 
     Zeroes demand on diagonal and unreachable (``dist == inf``) pairs —
     what every engine in this module does implicitly — and returns the
@@ -123,7 +123,9 @@ def mask_unreachable_demand(demand: np.ndarray, dist: np.ndarray,
     ``renormalize=True`` the surviving entries are rescaled to preserve
     the original total volume (the degradation curves' "demand
     renormalized over reachable pairs" convention). Accepts leading batch
-    axes as long as demand/dist broadcast together.
+    axes as long as demand/dist broadcast together. The full
+    unreachable-demand contract is documented ONCE, in the
+    `core.traffic.spec` module docstring.
     """
     demand = np.asarray(demand, np.float64)
     n = demand.shape[-1]
@@ -140,11 +142,21 @@ def mask_unreachable_demand(demand: np.ndarray, dist: np.ndarray,
 
 def demand_matrix(g: Graph, pairs: np.ndarray,
                   volume: float = 1.0) -> np.ndarray:
-    """(n, n) f64 demand from (F, 2) flow pairs: volume per flow, summed."""
-    d = np.zeros((g.n, g.n), dtype=np.float64)
-    np.add.at(d, (pairs[:, 0], pairs[:, 1]), volume)
-    np.fill_diagonal(d, 0.0)  # self-demand never crosses a link
-    return d
+    """(n, n) f64 demand from (F, 2) flow pairs: volume per flow, summed.
+
+    .. deprecated:: PR 10
+        Thin shim over `core.traffic.spec.pairs_to_matrix` (the one
+        pairs -> matrix primitive of the unified `TrafficSpec` path).
+    """
+    import warnings
+
+    from ..traffic.spec import pairs_to_matrix
+
+    warnings.warn("routing.assign.demand_matrix is deprecated; use "
+                  "core.traffic.TrafficSpec (or traffic.spec."
+                  "pairs_to_matrix) instead", DeprecationWarning,
+                  stacklevel=2)
+    return pairs_to_matrix(g.n, pairs, volume)
 
 
 def _bilinear_edge_loads(
@@ -287,6 +299,134 @@ def _ecmp_all_pairs_device(dist: np.ndarray, mult: np.ndarray,
                                   jnp.asarray(pad_operand(mult, p, 0.0)),
                                   jnp.asarray(pad_operand(adj, p, 0.0)),
                                   block=block)
+    sl = (Ellipsis, slice(None, n), slice(None, n))
+    return np.asarray(loads)[sl].astype(np.float64)
+
+
+def ecmp_demand_loads(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
+                      demand: np.ndarray, product: Optional[Callable] = None,
+                      use_kernel: bool = True) -> np.ndarray:
+    """Directed ECMP link loads of *arbitrary* (stacked) demand, O(diameter).
+
+    The demand-weighted generalization of :func:`ecmp_all_pairs_loads`:
+    seeding the Brandes backward recurrence with the pair's demand instead
+    of 1.0 (``Z_a[s,w] = (demand[s,w] + delta[s,w]) / sigma(s,w)`` on the
+    level set ``d(s,w) = a``) yields the exact expected loads of
+    :func:`ecmp_link_loads` in 2 counting products per BFS level instead
+    of O(diameter^2) bilinear terms — the identity the batched traffic
+    engine (`core.traffic.scenarios`) leans on to push thousands of demand
+    matrices through one stacked pass.
+
+    Demand on the diagonal and on unreachable pairs is dropped, never
+    routed (contract: `core.traffic.spec`); the level masks are gated on
+    finite distance, so partitioned graphs are first-class. All four
+    operands accept a leading batch axis and broadcast against each other
+    — one graph against an (S, n, n) demand stack, or per-sample graphs
+    (the traffic x failure grid) against per-sample demand. The kernel
+    default runs the whole accumulation device-resident
+    (`analysis.wavefront.ecmp_loads_device` with its weighted variant);
+    ``use_kernel=False`` (or an explicit ``product``) is the f64 host
+    oracle. Returns the directed ``(.., n, n)`` load matrix.
+    """
+    dist = np.asarray(dist)
+    mult = np.asarray(mult)
+    adj = np.asarray(adj)
+    demand = np.asarray(demand, np.float64)
+    batched = max(dist.ndim, demand.ndim) == 3
+    if batched:
+        shape = np.broadcast_shapes(dist.shape, mult.shape, adj.shape,
+                                    demand.shape)
+        if product is None and not use_kernel and dist.ndim == 2 \
+                and mult.ndim == 2 and adj.ndim == 2:
+            # host fast path: one shared graph, stacked demand — fuse each
+            # level's S small products into single (n, S*n) / (S*n, n)
+            # GEMMs (the counting product on floats IS matmul)
+            return _ecmp_demand_host_shared(
+                dist, mult, adj,
+                np.ascontiguousarray(np.broadcast_to(demand, shape)))
+        dist = np.ascontiguousarray(np.broadcast_to(dist, shape))
+        mult = np.ascontiguousarray(np.broadcast_to(mult, shape))
+        adj = np.ascontiguousarray(np.broadcast_to(adj, shape))
+        demand = np.ascontiguousarray(np.broadcast_to(demand, shape))
+    if product is None and use_kernel:
+        return _ecmp_demand_device(dist, mult, adj, demand)
+    if product is None:
+        product = count_product(use_kernel)
+    finite = np.isfinite(dist)
+    diam = int(dist[finite].max()) if finite.any() else 0
+    sigma_inv = np.where(finite & (mult > 0),
+                         1.0 / np.where(mult > 0, mult, 1.0), 0.0)
+    delta = np.zeros_like(sigma_inv)
+    acc = np.zeros_like(sigma_inv)
+    for a in range(diam - 1, -1, -1):
+        z = np.where(dist == a + 1, (demand + delta) * sigma_inv, 0.0)
+        f_a = np.where(dist == a, mult, 0.0)
+        acc = acc + np.asarray(product(np.swapaxes(f_a, -1, -2), z))
+        delta = np.where(dist == a, mult * np.asarray(product(z, adj)), delta)
+    return adj * acc
+
+
+def _ecmp_demand_host_shared(dist: np.ndarray, mult: np.ndarray,
+                             adj: np.ndarray, demand: np.ndarray
+                             ) -> np.ndarray:
+    """Shared-graph f64 Brandes over an (S, n, n) demand stack.
+
+    Same recurrence as the generic host loop, but with the graph operands
+    kept 2-D: the level's ``F_a^T @ Z_s`` products collapse into one
+    ``(n, S*n)`` GEMM (samples stacked along columns) and ``Z_s @ A`` into
+    one ``(S*n, n)`` GEMM, so BLAS sees two large multiplies per BFS level
+    instead of 2S small ones and no (S, n, n) graph copies are made.
+    """
+    s, n, _ = demand.shape
+    dist = np.asarray(dist, np.float64)
+    mult = np.asarray(mult, np.float64)
+    adj = np.asarray(adj, np.float64)
+    finite = np.isfinite(dist)
+    diam = int(dist[finite].max()) if finite.any() else 0
+    sigma_inv = np.where(finite & (mult > 0),
+                         1.0 / np.where(mult > 0, mult, 1.0), 0.0)
+    # per-level 2-D masks hoisted out of the stack loop; ``sig`` both
+    # applies 1/sigma and selects the level's cells, so no (S, n, n)
+    # ``where`` is ever materialized
+    sig = [np.where(dist == a + 1, sigma_inv, 0.0) for a in range(diam)]
+    dmul = [np.where(dist == a, mult, 0.0) for a in range(diam)]
+    out = np.empty((s, n, n), np.float64)
+    # chunk the stack so each chunk's temporaries stay cache-resident —
+    # a full 800 x n x n pass would be memory-bound on stack temporaries
+    chunk = max(1, min(s, (1 << 21) // (n * n * 8) or 1))
+    for lo in range(0, s, chunk):
+        dem = demand[lo:lo + chunk]
+        c = dem.shape[0]
+        acc = np.zeros((c, n, n), np.float64)
+        delta = np.zeros((c, n, n), np.float64)
+        for a in range(diam - 1, -1, -1):
+            # delta is only read on cells at distance a+1 (sig[a] masks the
+            # rest), so overwriting it each level is safe
+            z = (dem + delta) * sig[a]
+            z_cols = np.ascontiguousarray(
+                z.transpose(1, 0, 2)).reshape(n, c * n)
+            acc += (dmul[a].T @ z_cols).reshape(n, c, n).transpose(1, 0, 2)
+            if a:
+                delta = dmul[a] * (z.reshape(c * n, n) @ adj).reshape(c, n, n)
+        np.multiply(adj, acc, out=out[lo:lo + chunk])
+    return out
+
+
+def _ecmp_demand_device(dist: np.ndarray, mult: np.ndarray, adj: np.ndarray,
+                        demand: np.ndarray) -> np.ndarray:
+    """Pad all four operands -> weighted device Brandes -> sliced loads."""
+    import jax.numpy as jnp
+
+    from ..analysis.wavefront import ecmp_loads_device, pad_block, pad_operand
+
+    n = dist.shape[-1]
+    batched = dist.ndim == 3
+    p, block = pad_block(n, batched=batched)
+    loads = ecmp_loads_device(jnp.asarray(pad_operand(dist, p, np.inf)),
+                              jnp.asarray(pad_operand(mult, p, 0.0)),
+                              jnp.asarray(pad_operand(adj, p, 0.0)),
+                              demand=jnp.asarray(pad_operand(demand, p, 0.0)),
+                              block=block)
     sl = (Ellipsis, slice(None, n), slice(None, n))
     return np.asarray(loads)[sl].astype(np.float64)
 

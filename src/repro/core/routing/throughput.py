@@ -183,11 +183,15 @@ def route_greedy_shortest(g: Graph, length_mat: np.ndarray, dist: np.ndarray,
 
 
 def max_concurrent_flow(
-        g: Graph, demand: np.ndarray, eps: float = 0.1,
+        g: Graph, demand, eps: float = 0.1,
         max_rounds: int = 200, capacity: float = 1.0,
         use_kernel: bool = True, seed: int = 0,
         chunk: int = 16384) -> Dict[str, object]:
     """Max concurrent flow of ``demand`` under unit-per-direction capacities.
+
+    ``demand`` accepts an ``(n, n)`` matrix, a `core.traffic.TrafficSpec`,
+    or a spec string (``"hotspot:zipf_a=1.4"``) — specs materialize their
+    sample-0 matrix via the unified demand path.
 
     Returns a dict with the certified bounds:
       throughput          feasible lower bound on lambda (averaged flow)
@@ -213,6 +217,11 @@ def max_concurrent_flow(
     if eps <= 0:
         raise ValueError("eps must be positive")
     n = g.n
+    if isinstance(demand, str) or not hasattr(demand, "__array__") \
+            and not isinstance(demand, (list, tuple)):
+        from ..traffic.spec import as_spec
+
+        demand = as_spec(demand).matrix(g)
     demand = np.asarray(demand, np.float64)
     if demand.shape != (n, n):
         raise ValueError(f"demand must be (n, n) = {(n, n)}, "

@@ -235,7 +235,7 @@ def sweep(families: Optional[Sequence[str]] = None,
           use_kernel: bool = True,
           throughput: bool = True,
           graphs: Optional[Sequence[Graph]] = None,
-          mesh="auto") -> Dict:
+          mesh="auto", traffic=None) -> Dict:
     """Run the equal-cost comparison; returns ``{"rows": [...], ...}``.
 
     Pass ``graphs`` to analyze a pre-built list (the benchmarks reuse this
@@ -244,8 +244,18 @@ def sweep(families: Optional[Sequence[str]] = None,
     chain runs row-sharded over a 1-D mesh (`analysis.distributed`):
     ``mesh="auto"`` picks it up, an explicit Mesh pins it, None forces the
     single-device engines.
+
+    ``traffic`` (a `core.traffic.TrafficSpec` or spec string, ``--traffic``
+    on the CLI) additionally pushes that scenario's demand batch through
+    each family, reusing the sweep's own dist/mult slices — adds
+    ``traffic`` / ``traffic_max_load`` / ``traffic_tput_lb`` columns.
     """
     t0 = time.time()
+    traffic_spec = None
+    if traffic is not None:
+        from .traffic.spec import as_spec
+
+        traffic_spec = as_spec(traffic)
     with obs.span("sweep", cat="sweep", use_kernel=use_kernel) as root:
         if graphs is None:
             with obs.span("sweep.build", cat="sweep"):
@@ -361,12 +371,23 @@ def sweep(families: Optional[Sequence[str]] = None,
                     # device telemetry: BFS levels this family's wavefront
                     # actually ran (= its diameter on connected graphs)
                     row["wavefront_levels"] = int(wf_levels[i])
+                if traffic_spec is not None:
+                    from .traffic.scenarios import evaluate_traffic_batch
+
+                    tv = evaluate_traffic_batch(g, traffic_spec, dist=d,
+                                                mult=m,
+                                                use_kernel=use_kernel)
+                    row["traffic"] = traffic_spec.describe()
+                    row["traffic_max_load"] = float(
+                        tv["max_link_load"].mean())
+                    row["traffic_tput_lb"] = float(tv["tput_lb"].mean())
                 rows.append(row)
     return {
         "rows": rows,
         "budget": budget,
         "batched": True,
         "use_kernel": use_kernel,
+        "traffic": traffic_spec.describe() if traffic_spec else None,
         "elapsed_s": round(time.time() - t0, 2),
     }
 
@@ -385,19 +406,29 @@ _COLS = [
 ]
 
 
+#: extra columns when the sweep ran with a --traffic scenario
+_TRAFFIC_COLS = [
+    ("tr-load", ">9.3f", "traffic_max_load"),
+    ("tr-tput", ">9.4f", "traffic_tput_lb"),
+]
+
+
 def format_table(result: Dict) -> str:
     """Paper-style fixed-width comparison table."""
     budget = result.get("budget")
     budget_s = f"budget={budget:.3e} " if budget else ""
+    traffic = result.get("traffic")
+    traffic_s = f" traffic={traffic}" if traffic else ""
+    cols = _COLS + (_TRAFFIC_COLS if traffic else [])
     lines = [f"equal-cost sweep: {budget_s}"
              f"({len(result['rows'])} families, "
-             f"{result['elapsed_s']}s batched analysis)"]
-    hdr = "".join(f"{name:>{_w(fmt)}s}" for name, fmt, _ in _COLS)
+             f"{result['elapsed_s']}s batched analysis{traffic_s})"]
+    hdr = "".join(f"{name:>{_w(fmt)}s}" for name, fmt, _ in cols)
     lines.append(hdr)
     lines.append("-" * len(hdr))
     for row in sorted(result["rows"], key=lambda r: r["family"]):
         cells = []
-        for _, fmt, key in _COLS:
+        for _, fmt, key in cols:
             v = row.get(key)
             cells.append(" " * _w(fmt) if v is None else f"{v:{fmt}}")
         lines.append("".join(cells))
@@ -574,6 +605,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--ref-family", default="slimfly")
     ap.add_argument("--ref-servers", type=int, default=2000)
     ap.add_argument("--max-routers", type=int, default=512)
+    ap.add_argument("--traffic", default=None,
+                    help="TrafficSpec flag grammar (e.g. "
+                         "'hotspot:zipf_a=1.4,samples=8'): add per-family "
+                         "scenario load/throughput columns")
     ap.add_argument("--no-kernel", action="store_true",
                     help="numpy/jnp oracle products instead of Pallas")
     ap.add_argument("--out", default=None,
@@ -654,7 +689,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     result = sweep(fams, budget=args.budget,
                    ref=(args.ref_family, args.ref_servers),
                    max_routers=args.max_routers,
-                   use_kernel=not args.no_kernel)
+                   use_kernel=not args.no_kernel, traffic=args.traffic)
     table = format_table(result)
     print(table)
     if args.out:

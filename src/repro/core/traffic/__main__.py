@@ -1,0 +1,6 @@
+"""``python -m repro.core.traffic`` — the traffic x failure grid CLI."""
+import sys
+
+from .grid import main
+
+sys.exit(main())

@@ -1,10 +1,12 @@
 """Synthetic traffic workloads for topology evaluation.
 
-Traffic matrices over routers (servers implicit): permutation (all flows of a
-server share a destination — the load-balancing stress case), uniform random,
-and skewed (zipf) patterns. `evaluate_workload` is a thin wrapper over the
-`routing` subsystem: sampled flows are routed with one vectorized batched
-path chase (no per-flow Python loop), expected loads come from
+Demand specification now lives in `core.traffic` (the unified
+:class:`~repro.core.traffic.TrafficSpec` language); this module keeps the
+flow-pairs :class:`Workload` container plus the sampled-path evaluator,
+and :func:`make_traffic` survives as a deprecation shim over the spec
+registry. `evaluate_workload` is a thin wrapper over the `routing`
+subsystem: sampled flows are routed with one vectorized batched path
+chase (no per-flow Python loop), expected loads come from
 `routing.assign.ecmp_link_loads`, and both reports share the single
 link-load convention documented in `routing.assign` (undirected links in
 ``g.edges`` order; statistics over the used support).
@@ -12,6 +14,7 @@ link-load convention documented in `routing.assign` (undirected links in
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
@@ -23,6 +26,10 @@ from .routing import assign as _assign
 __all__ = ["Workload", "make_traffic", "evaluate_workload",
            "expected_link_loads", "sample_flow_link_loads"]
 
+#: make_traffic's historical pattern names -> TrafficSpec registry names
+_LEGACY_PATTERNS = {"permutation": "permutation", "uniform": "uniform",
+                    "skewed": "hotspot"}
+
 
 @dataclasses.dataclass
 class Workload:
@@ -33,32 +40,41 @@ class Workload:
     name: str = "workload"
 
     def demand_matrix(self, g: Graph) -> np.ndarray:
-        """(n, n) demand matrix for the routing subsystem."""
-        return _assign.demand_matrix(g, self.pairs, self.volume)
+        """(n, n) demand matrix for the routing subsystem.
+
+        Thin delegate to `core.traffic.spec.pairs_to_matrix` (the one
+        pairs -> matrix primitive).
+        """
+        from .traffic.spec import pairs_to_matrix
+
+        return pairs_to_matrix(g.n, self.pairs, self.volume)
 
 
 def make_traffic(g: Graph, pattern: str = "permutation", flows: int = 4096,
                  seed: int = 0, zipf_a: float = 1.3) -> Workload:
-    rng = np.random.default_rng(seed)
-    n = g.n
-    if pattern == "permutation":
-        perm = rng.permutation(n)
-        # fixed random permutation: all flows of router i target perm[i]
-        src = rng.integers(0, n, size=flows)
-        dst = perm[src]
-    elif pattern == "uniform":
-        src = rng.integers(0, n, size=flows)
-        dst = rng.integers(0, n, size=flows)
-    elif pattern == "skewed":
-        # zipf-distributed destination popularity: hotspot traffic
-        src = rng.integers(0, n, size=flows)
-        ranks = (rng.zipf(zipf_a, size=flows) - 1) % n
-        dst = rng.permutation(n)[ranks]
-    else:
+    """Sample a flow-pairs workload from a named pattern.
+
+    .. deprecated:: PR 10
+        Shim over `core.traffic.TrafficSpec` (``"skewed"`` maps to the
+        registry's ``hotspot``). Unlike the historical implementation,
+        the returned workload now holds *exactly* ``flows`` pairs — pairs
+        are drawn from the pattern's demand distribution, whose diagonal
+        is zero, instead of being filtered after independent src/dst
+        draws.
+    """
+    warnings.warn("workload.make_traffic is deprecated; use "
+                  "core.traffic.TrafficSpec (e.g. TrafficSpec.parse("
+                  f"'{pattern}:flows={flows}')) instead",
+                  DeprecationWarning, stacklevel=2)
+    from .traffic.spec import TrafficSpec
+
+    if pattern not in _LEGACY_PATTERNS:
         raise ValueError(f"unknown pattern {pattern!r}")
-    keep = src != dst
-    return Workload(pairs=np.stack([src[keep], dst[keep]], axis=1),
-                    name=f"{pattern}(flows={flows})")
+    name = _LEGACY_PATTERNS[pattern]
+    params = {"zipf_a": zipf_a} if name == "hotspot" else {}
+    spec = TrafficSpec(pattern=name, flows=int(flows), seed=int(seed),
+                       params=params)
+    return Workload(pairs=spec.pairs(g), name=f"{pattern}(flows={flows})")
 
 
 def sample_flow_link_loads(
@@ -125,10 +141,32 @@ def expected_link_loads(g: Graph, wl: Workload, dist: np.ndarray,
                                    use_kernel=False)
 
 
-def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
+def _as_workload(g: Graph, wl) -> "Workload":
+    """Normalize Workload | TrafficSpec | spec-string to a Workload.
+
+    A spec without ``flows`` gets the module default (4096) so the
+    sampled-path estimator has flows to chase; the exact expected-load
+    side of the report still uses the workload's demand matrix.
+    """
+    if isinstance(wl, Workload):
+        return wl
+    from .traffic.spec import TrafficSpec
+
+    spec = TrafficSpec.parse(wl)
+    if spec.flows is None:
+        spec = spec.with_(flows=4096)
+    return Workload(pairs=spec.pairs(g), volume=spec.volume,
+                    name=spec.describe())
+
+
+def evaluate_workload(g: Graph, wl, dist: Optional[np.ndarray] = None,
                       seed: int = 0, mult: Optional[np.ndarray] = None,
                       model=None) -> Dict:
     """Route every flow on a sampled shortest path; report link loads.
+
+    ``wl`` accepts a :class:`Workload`, a `core.traffic.TrafficSpec`, or
+    a spec string (``"hotspot:zipf_a=1.4,flows=8192"``) — specs are
+    materialized to flow pairs via the unified demand path.
 
     max_link_load (flows across the most loaded link, normalized by the mean)
     approximates the inverse saturation throughput of the pattern. When the
@@ -145,6 +183,7 @@ def evaluate_workload(g: Graph, wl: Workload, dist: Optional[np.ndarray] = None,
     `routing.RoutingModel` as ``model`` swaps the expected-load side for
     that model (e.g. Valiant or slack routing).
     """
+    wl = _as_workload(g, wl)
     if dist is None:
         dist = apsp_dense(g)
     rng = np.random.default_rng(seed)
